@@ -1,0 +1,174 @@
+"""Roofline analysis from the dry-run's compiled artifacts (§Roofline).
+
+Hardware constants (TPU v5e target):
+  peak bf16 compute  197e12 FLOP/s per chip
+  HBM bandwidth      819e9  B/s  per chip
+  ICI link bandwidth ~50e9  B/s  per chip (DCI between pods ~25e9, modeled)
+
+Three terms per (arch × shape) on the single-pod mesh:
+  compute    = HLO_FLOPs / (chips · peak)
+  memory     = HLO_bytes / (chips · HBM_bw)
+  collective = collective_wire_bytes / (chips · link_bw)
+
+HLO numbers use the depth-extrapolated values (XLA counts while bodies
+once; see dryrun._extrapolate).  Inner sequence loops (q-chunk lax.map,
+SSD chunk scan) are still counted once by XLA, so we also report
+MODEL_FLOPS (analytic 6·N·D / 2·N·D incl. attention quadratic terms) and
+flag when the analytic bound exceeds the HLO estimate — the compute term
+uses max(HLO, MODEL_FLOPS/chips/peak).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+CHIPS_SINGLE = 256
+
+
+def analytic_flops(arch: str, shape: str) -> Optional[float]:
+    """MODEL_FLOPS: 6·N_active·D for train, 2·N_active·D for prefill,
+    2·N_active·B for decode, plus attention score/value terms."""
+    from repro.configs import get_config
+    from repro.configs.shapes import SHAPES, vision_prefix
+
+    cfg = get_config(arch)
+    shp = SHAPES[shape]
+    # active params per token
+    n_active = _active_params(cfg)
+    if shp.kind == "train":
+        tokens = shp.global_batch * shp.seq_len
+        base = 6.0 * n_active * tokens
+        attn = 3.0 * _attn_flops(cfg, shp.global_batch, shp.seq_len)
+    elif shp.kind == "prefill":
+        tokens = shp.global_batch * shp.seq_len
+        base = 2.0 * n_active * tokens
+        attn = _attn_flops(cfg, shp.global_batch, shp.seq_len)
+    else:  # decode: one token per sequence, full-cache attention reads
+        tokens = shp.global_batch
+        base = 2.0 * n_active * tokens
+        attn = _attn_decode_flops(cfg, shp.global_batch, shp.seq_len)
+    return base + attn
+
+
+def _active_params(cfg) -> float:
+    """Parameters touched per token (MoE: top-k experts only)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models import model
+    shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0), cfg))
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    total = 0.0
+    for path, leaf in flat:
+        p = jax.tree_util.keystr(path)
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        if "['moe']['w_" in p:
+            n = n * cfg.top_k / cfg.num_experts
+        total += n
+    return total
+
+
+def _attn_layers(cfg) -> int:
+    per = sum(1 for k in cfg.block_pattern if k in ("dense", "moe", "lattn"))
+    n = cfg.num_superblocks * per
+    n += sum(1 for j in range(cfg.tail_layers)
+             if cfg.block_pattern[j % len(cfg.block_pattern)]
+             in ("dense", "moe", "lattn"))
+    return n
+
+
+def _attn_flops(cfg, B: int, S: int) -> float:
+    """Scores + values einsum FLOPs for a full forward (causal halves)."""
+    nl = _attn_layers(cfg)
+    if nl == 0:
+        return 0.0
+    eff = min(cfg.window, S) if cfg.window else S
+    per_q = eff if not cfg.causal else eff / 2.0
+    return nl * 4.0 * B * cfg.num_heads * S * per_q * cfg.head_dim
+
+
+def _attn_decode_flops(cfg, B: int, S: int) -> float:
+    nl = _attn_layers(cfg)
+    if nl == 0:
+        return 0.0
+    eff = min(cfg.window, S) if cfg.window else S
+    return nl * 4.0 * B * cfg.num_heads * eff * cfg.head_dim
+
+
+def load_records(dryrun_dir: str, mesh: str = "single_pod_16x16") -> List[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dryrun_dir, f"*_{mesh}.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def roofline_row(rec: dict) -> Optional[dict]:
+    if rec.get("status") != "ok":
+        return {"arch": rec["arch"], "shape": rec["shape"],
+                "status": rec.get("status"),
+                "note": rec.get("reason") or rec.get("error", "")[:100]}
+    chips = rec["n_devices"]
+    corr = rec.get("corrected", {})
+    cost = rec.get("cost", {})
+    flops_hlo = corr.get("flops", cost.get("flops", 0.0)) * chips
+    bytes_hlo = corr.get("bytes_accessed",
+                         cost.get("bytes_accessed", 0.0)) * chips
+    coll = corr.get("collective_total_bytes",
+                    rec["collectives"]["total_bytes"]) * chips
+
+    model_flops = analytic_flops(rec["arch"], rec["shape"]) or 0.0
+    flops_eff = max(flops_hlo, model_flops)
+
+    t_compute = flops_eff / (chips * PEAK_FLOPS)
+    t_memory = bytes_hlo / (chips * HBM_BW)
+    t_coll = coll / (chips * ICI_BW)
+    dom = max((t_compute, "compute"), (t_memory, "memory"),
+              (t_coll, "collective"))[1]
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "status": "ok",
+        "compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll,
+        "bottleneck": dom,
+        "model_flops": model_flops, "hlo_flops": flops_hlo,
+        "useful_ratio": (model_flops / flops_hlo) if flops_hlo else None,
+        "args_gib_per_dev": rec["memory"].get("argument_size_in_bytes", 0) / 2**30,
+    }
+
+
+def table(dryrun_dir: str = "experiments/dryrun") -> List[dict]:
+    return [r for r in (roofline_row(rec) for rec in load_records(dryrun_dir))
+            if r is not None]
+
+
+def markdown_table(rows: List[dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | bottleneck "
+           "| MODEL/HLO flops | args GiB/dev |\n|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"{r['status']}: {r.get('note','')} | — | — |")
+            continue
+        ratio = r["useful_ratio"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} "
+            f"| {r['memory_s']:.4f} | {r['collective_s']:.4f} "
+            f"| **{r['bottleneck']}** "
+            f"| {ratio:.2f} | {r['args_gib_per_dev']:.2f} |")
+    return "\n".join(lines)
+
+
+def main():
+    rows = table()
+    print(markdown_table(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Regenerate the §Dry-run and §Roofline tables in EXPERIMENTS.md from
+experiments/dryrun/*.json (between the <!-- ..._TABLE --> markers)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+from roofline import load_records, roofline_row  # noqa: E402
+
+
+def dryrun_table(dryrun_dir: str) -> str:
+    rows = []
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    recs.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    hdr = ("| arch | shape | mesh | status | compile s | args GiB/dev "
+           "| raw coll GiB/dev | note |\n|---|---|---|---|---|---|---|---|")
+    rows.append(hdr)
+    for r in recs:
+        if r["status"] == "ok":
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
+                f"| {r.get('compile_s', '—')} "
+                f"| {r['memory'].get('argument_size_in_bytes', 0)/2**30:.2f} "
+                f"| {r['collectives']['total_bytes']/2**30:.2f} |  |")
+        else:
+            note = (r.get("reason") or r.get("error", ""))[:80]
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                        f"| **{r['status']}** | — | — | — | {note} |")
+    n_ok = sum(1 for r in recs if r["status"] == "ok")
+    n_skip = sum(1 for r in recs if r["status"] == "skipped")
+    n_err = len(recs) - n_ok - n_skip
+    rows.append(f"\n**{n_ok} compiled ok, {n_skip} skipped (per the "
+                f"applicability rules), {n_err} errors** out of {len(recs)} "
+                "combinations.")
+    return "\n".join(rows)
+
+
+def roofline_table_md(dryrun_dir: str) -> str:
+    from roofline import markdown_table, table
+    rows = table(dryrun_dir)
+    ok = [r for r in rows if r.get("status") == "ok"]
+    bn = {}
+    for r in ok:
+        bn[r["bottleneck"]] = bn.get(r["bottleneck"], 0) + 1
+    summary = (f"\nDominant bottleneck counts: {bn}.  One-line reads: "
+               "collective-bound pairs want the §Perf sharding levers "
+               "(pure-DP for small archs, fewer weight gathers); "
+               "memory-bound decode pairs want bf16 caches + fused "
+               "attention reads (Pallas kernel); compute-bound prefill "
+               "pairs are already near the right regime — block-skipping "
+               "flash attention moves them next.")
+    return markdown_table(rows) + "\n" + summary
+
+
+def splice(md: str, marker: str, content: str) -> str:
+    pat = re.compile(rf"<!-- {marker} -->.*?(?=\n## |\Z)", re.S)
+    repl = f"<!-- {marker} -->\n\n{content}\n"
+    if pat.search(md):
+        return pat.sub(repl.replace("\\", "\\\\"), md)
+    return md + "\n" + repl
+
+
+def main():
+    dryrun_dir = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    path = "EXPERIMENTS.md"
+    md = open(path).read()
+    md = splice(md, "DRYRUN_TABLE", dryrun_table(dryrun_dir))
+    md = splice(md, "ROOFLINE_TABLE", roofline_table_md(dryrun_dir))
+    open(path, "w").write(md)
+    print("EXPERIMENTS.md tables updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Quickstart: LAG on the paper's own problem in ~20 lines.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+Reproduces the headline result: LAG-WK matches batch GD's iteration count
+while cutting worker→server uploads by an order of magnitude when the
+workers' smoothness constants are heterogeneous (paper Fig. 3 / Table 5).
+"""
+import jax
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+
+from repro.core import synthetic, run
+
+# 9 workers, increasing smoothness L_m = (1.3^{m-1}+1)² — the paper's setup
+problem = synthetic("linreg", num_workers=9, seed=0, dtype=jnp.float64)
+print(f"worker smoothness L_m: {[round(float(l), 1) for l in problem.L_m]}")
+
+EPS = 1e-8
+for algo in ("gd", "lag-wk", "lag-ps", "cyc-iag", "num-iag"):
+    r = run(problem, algo, K=3000)
+    iters, comms = r.iters_to(EPS), r.comms_to(EPS)
+    print(f"{algo:8s}  iterations to 1e-8: {str(iters):>6s}   "
+          f"uploads to 1e-8: {str(comms):>6s}")
+
+r = run(problem, "lag-wk", K=500)
+uploads = r.comm_mask.sum(0)
+print("\nLemma 4 in action — uploads per worker over 500 rounds "
+      "(L_m increasing left to right):")
+print("  " + " ".join(f"{int(u):4d}" for u in uploads))

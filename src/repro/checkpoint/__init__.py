@@ -1,0 +1,1 @@
+from repro.checkpoint.store import save, restore, latest_step

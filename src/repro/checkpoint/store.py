@@ -1,0 +1,76 @@
+"""Checkpointing without orbax: flattened-pytree npz with a msgpack-encoded
+treedef manifest.  Saves params, optimizer state, LAG state (∇^k, per-worker
+grad_hat/theta_hat, hist) and step — restart-safe for the LAG trainer since
+the lazy gradients ARE algorithm state (losing them would silently reset
+every worker's trigger).
+
+Arrays are device-gathered to host before writing (CPU container: no-op).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+Pytree = Any
+
+_CKPT_RE = re.compile(r"^step_(\d+)\.npz$")
+
+
+def _flatten_with_paths(tree: Pytree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)
+    leaves = [(jax.tree_util.keystr(path), leaf) for path, leaf in flat[0]]
+    return leaves, flat[1]
+
+
+def save(ckpt_dir: str, step: int, tree: Pytree) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    leaves, _ = _flatten_with_paths(tree)
+    arrays = {}
+    manifest = []
+    for i, (path, leaf) in enumerate(leaves):
+        key = f"a{i}"
+        arrays[key] = np.asarray(jax.device_get(leaf))
+        manifest.append({"key": key, "path": path,
+                         "dtype": str(arrays[key].dtype)})
+    path = os.path.join(ckpt_dir, f"step_{step}.npz")
+    tmp = path + ".tmp.npz"
+    np.savez(tmp, __manifest__=np.frombuffer(
+        json.dumps(manifest).encode(), dtype=np.uint8), **arrays)
+    os.replace(tmp, path)
+    return path
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
+             if (m := _CKPT_RE.match(f))]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, like: Pytree, step: Optional[int] = None
+            ) -> Tuple[Pytree, int]:
+    """Restore into the structure of ``like`` (validates paths match)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    with np.load(os.path.join(ckpt_dir, f"step_{step}.npz")) as z:
+        manifest = json.loads(bytes(z["__manifest__"]).decode())
+        by_path = {m["path"]: np.asarray(z[m["key"]]) for m in manifest}
+    leaves, treedef = _flatten_with_paths(like)
+    out = []
+    for path, leaf in leaves:
+        if path not in by_path:
+            raise KeyError(f"checkpoint missing leaf {path}")
+        arr = by_path[path]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch at {path}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        out.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out), step

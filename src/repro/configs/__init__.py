@@ -1,0 +1,33 @@
+"""Architecture registry: the 10 assigned configs (+ the beyond-paper
+sliding-window llama variant).  ``get_config(arch_id, **overrides)``."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.models.common import ModelConfig
+
+_MODULES: Dict[str, str] = {
+    "mamba2-370m": "repro.configs.mamba2_370m",
+    "hubert-xlarge": "repro.configs.hubert_xlarge",
+    "qwen2-vl-7b": "repro.configs.qwen2_vl_7b",
+    "recurrentgemma-9b": "repro.configs.recurrentgemma_9b",
+    "granite-8b": "repro.configs.granite_8b",
+    "llama3.2-1b": "repro.configs.llama3_2_1b",
+    "llama3.2-1b-sw": "repro.configs.llama3_2_1b_sw",
+    "qwen3-moe-235b-a22b": "repro.configs.qwen3_moe_235b_a22b",
+    "command-r-35b": "repro.configs.command_r_35b",
+    "llama3.2-3b": "repro.configs.llama3_2_3b",
+    "qwen3-moe-30b-a3b": "repro.configs.qwen3_moe_30b_a3b",
+}
+
+# The 10 officially assigned architectures (the -sw variant is extra).
+ASSIGNED = [a for a in _MODULES if a != "llama3.2-1b-sw"]
+ALL_ARCHS = list(_MODULES)
+
+
+def get_config(arch_id: str, **overrides) -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(_MODULES[arch_id])
+    return mod.get_config(**overrides)

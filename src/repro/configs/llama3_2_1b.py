@@ -1,0 +1,14 @@
+"""llama3.2-1b — small llama3 [hf:meta-llama/Llama-3.2-1B]."""
+from repro.models.common import ModelConfig
+
+
+def get_config(**kw) -> ModelConfig:
+    base = dict(
+        arch_id="llama3.2-1b", family="dense",
+        num_layers=16, d_model=2048, vocab_size=128256,
+        num_heads=32, num_kv_heads=8, head_dim=64, d_ff=8192,
+        block_pattern=("dense",), rope="rope", rope_theta=500_000.0,
+        norm="rmsnorm", act="swiglu", tie_embeddings=True,
+    )
+    base.update(kw)
+    return ModelConfig(**base)

@@ -1,0 +1,9 @@
+"""llama3.2-1b-sw — BEYOND-PAPER variant: llama3.2-1b with a 4096-token
+sliding window, making the dense family sub-quadratic so it can run the
+long_500k decode shape (see DESIGN.md §5)."""
+from repro.configs.llama3_2_1b import get_config as _base
+
+
+def get_config(**kw):
+    cfg = _base(arch_id="llama3.2-1b-sw", window=4096, **kw)
+    return cfg

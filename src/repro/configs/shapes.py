@@ -1,0 +1,128 @@
+"""Assigned input shapes and ShapeDtypeStruct input specs for the dry-run.
+
+Shapes (from the assignment):
+  train_4k     seq 4,096    global_batch 256   train_step
+  prefill_32k  seq 32,768   global_batch 32    forward (prefill)
+  decode_32k   seq 32,768   global_batch 128   serve_step (1 token, 32k cache)
+  long_500k    seq 524,288  global_batch 1     serve_step (1 token, 500k ctx)
+
+Applicability rules (DESIGN.md §5): encoder-only archs have no decode
+shapes; long_500k needs a sub-quadratic sequence mixer (ssd / rec layers or
+a sliding window).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+ShapeStruct = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def subquadratic(cfg: ModelConfig) -> bool:
+    """True iff every sequence mixer is O(S·window) or better."""
+    for k in cfg.block_pattern:
+        if k in ("ssd", "rec", "lattn"):
+            continue                      # recurrent / windowed by definition
+        if k in ("dense", "moe") and cfg.window is None:
+            return False                  # full attention
+    return True
+
+
+def applicable(cfg: ModelConfig, shape_name: str) -> Tuple[bool, str]:
+    """(runs?, reason-if-skipped)."""
+    shp = SHAPES[shape_name]
+    if shp.kind == "decode" and cfg.family == "audio":
+        return False, "encoder-only architecture has no decode step"
+    if shape_name == "long_500k" and not subquadratic(cfg):
+        return False, "pure full-attention arch; long_500k needs sub-quadratic mixer"
+    return True, ""
+
+
+def vision_prefix(cfg: ModelConfig, seq_len: int) -> int:
+    """Number of stub vision-patch positions for VLM shapes (S//4)."""
+    return seq_len // 4 if cfg.family == "vlm" else 0
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> Dict[str, ShapeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    shp = SHAPES[shape_name]
+    B, S = shp.global_batch, shp.seq_len
+    i32, f = jnp.int32, cfg.compute_dtype
+
+    if shp.kind == "decode":
+        return {"tokens": ShapeStruct((B, 1), i32),
+                "pos": ShapeStruct((), i32)}
+
+    if cfg.family == "audio":
+        specs = {"frames": ShapeStruct((B, S, cfg.d_model), f),
+                 "mask": ShapeStruct((B, S), jnp.bool_)}
+        if shp.kind == "train":
+            specs["targets"] = ShapeStruct((B, S), i32)
+        return specs
+
+    if cfg.family == "vlm":
+        nv = vision_prefix(cfg, S)
+        specs = {"tokens": ShapeStruct((B, S - nv), i32),
+                 "vision_embeds": ShapeStruct((B, nv, cfg.d_model), f),
+                 "positions3": ShapeStruct((3, B, S), i32)}
+        if shp.kind == "train":
+            specs["targets"] = ShapeStruct((B, S - nv), i32)
+        return specs
+
+    specs = {"tokens": ShapeStruct((B, S), i32)}
+    if shp.kind == "train":
+        specs["targets"] = ShapeStruct((B, S), i32)
+    return specs
+
+
+def concrete_inputs(cfg: ModelConfig, shape_name: str, seed: int = 0,
+                    batch: Optional[int] = None, seq: Optional[int] = None
+                    ) -> dict:
+    """Small concrete batches for smoke tests (reduced configs)."""
+    shp = SHAPES[shape_name]
+    B = batch or shp.global_batch
+    S = seq or shp.seq_len
+    key = jax.random.PRNGKey(seed)
+    i32 = jnp.int32
+    if shp.kind == "decode":
+        return {"tokens": jax.random.randint(key, (B, 1), 0, cfg.vocab_size, i32),
+                "pos": jnp.zeros((), i32)}
+    if cfg.family == "audio":
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {"frames": jax.random.normal(k1, (B, S, cfg.d_model),
+                                            cfg.compute_dtype),
+                "mask": jax.random.bernoulli(k2, 0.08, (B, S)),
+                "targets": jax.random.randint(k3, (B, S), 0, cfg.vocab_size, i32)}
+    if cfg.family == "vlm":
+        nv = vision_prefix(cfg, S)
+        k1, k2, k3 = jax.random.split(key, 3)
+        base = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        return {"tokens": jax.random.randint(k1, (B, S - nv), 0, cfg.vocab_size, i32),
+                "vision_embeds": jax.random.normal(k2, (B, nv, cfg.d_model),
+                                                   cfg.compute_dtype),
+                "positions3": jnp.broadcast_to(base[None], (3, B, S)).astype(i32),
+                "targets": jax.random.randint(k3, (B, S - nv), 0, cfg.vocab_size, i32)}
+    k1, k2 = jax.random.split(key)
+    return {"tokens": jax.random.randint(k1, (B, S), 0, cfg.vocab_size, i32),
+            "targets": jax.random.randint(k2, (B, S), 0, cfg.vocab_size, i32)}

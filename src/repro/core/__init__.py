@@ -1,0 +1,6 @@
+"""LAG core: trigger rules, lazy aggregation, convex experiment harness."""
+from repro.core.lag import (LAGConfig, WorkerState, hist_init, hist_push,
+                            trigger_rhs, wk_communicate, ps_communicate,
+                            worker_round, server_update, tree_sqnorm)
+from repro.core.convex import Problem, synthetic, real_standin, gisette_standin
+from repro.core.simulate import run, RunResult, ALGOS

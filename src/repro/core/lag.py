@@ -1,0 +1,202 @@
+"""Core LAG (Lazily Aggregated Gradient) primitives — Chen et al., NIPS 2018.
+
+This module implements the paper's update (eq. 4) and both trigger rules
+(eq. 15a worker-side "LAG-WK", eq. 15b server-side "LAG-PS") as *pure,
+per-worker* functions over arbitrary gradient pytrees.  Two drivers reuse
+them:
+
+* ``repro.core.simulate`` — the parameter-server simulation used for the
+  paper's convex experiments (workers as a stacked leading axis, vmapped).
+* ``repro.dist.lag_trainer`` — the shard_map distributed trainer where a
+  "worker" is a data-mesh axis group and the server is virtual
+  (all-reduce data parallelism), plus the pod-level variant where the
+  cross-pod collective is *actually skipped* via ``lax.cond``.
+
+Everything is functional: state in, state out, jit/scan friendly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LAGConfig:
+    """Hyper-parameters of LAG (paper notation in brackets).
+
+    Attributes:
+      num_workers: number of workers [M].
+      alpha: stepsize [α]; paper uses 1/L.
+      D: length of the iterate-lag window [D]; paper default 10.
+      xi: trigger weights [ξ_d]; scalar → uniform ξ_d = xi for all d.
+        Paper default for LAG-WK is ξ = 1/D, for LAG-PS ξ = 10/D.
+      rule: "wk" (15a) or "ps" (15b).
+    """
+    num_workers: int
+    alpha: float
+    D: int = 10
+    xi: float = 0.1
+    rule: str = "wk"
+
+    def xi_vector(self) -> jnp.ndarray:
+        return jnp.full((self.D,), self.xi, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Pytree helpers
+# ---------------------------------------------------------------------------
+
+def tree_sqnorm(tree: Pytree) -> jnp.ndarray:
+    """Σ ‖leaf‖² over the whole pytree (float32 scalar)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return jnp.zeros((), jnp.float32)
+    # accumulate in (at least) float32; float64 inputs keep float64 under x64
+    return sum(jnp.sum(jnp.square(l.astype(jnp.promote_types(l.dtype, jnp.float32))))
+               for l in leaves)
+
+
+def tree_sub(a: Pytree, b: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(lambda x, y: x - y, a, b)
+
+
+def tree_add(a: Pytree, b: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(lambda x, y: x + y, a, b)
+
+
+def tree_scale(a: Pytree, s) -> Pytree:
+    return jax.tree_util.tree_map(lambda x: x * s, a)
+
+
+def tree_select(pred: jnp.ndarray, on_true: Pytree, on_false: Pytree) -> Pytree:
+    """Per-tree select on a scalar bool predicate (shape-polymorphic)."""
+    return jax.tree_util.tree_map(
+        lambda t, f: jnp.where(pred, t.astype(f.dtype), f), on_true, on_false)
+
+
+def tree_zeros_like(a: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(jnp.zeros_like, a)
+
+
+# ---------------------------------------------------------------------------
+# Iterate-lag history (the RHS of the triggers, eq. 14)
+# ---------------------------------------------------------------------------
+
+def hist_init(D: int) -> jnp.ndarray:
+    """Ring buffer of ‖θ^{k+1-d} − θ^{k-d}‖², most recent first. Zeros ⇒ the
+    first iterations trigger communication for every worker (matches the
+    paper's initialization where all workers upload at k=0)."""
+    return jnp.zeros((D,), jnp.float32)
+
+
+def hist_push(hist: jnp.ndarray, sqnorm_new: jnp.ndarray) -> jnp.ndarray:
+    """Push the newest squared iterate difference to the front."""
+    return jnp.concatenate([sqnorm_new[None].astype(jnp.float32), hist[:-1]])
+
+
+def trigger_rhs(hist: jnp.ndarray, cfg: LAGConfig) -> jnp.ndarray:
+    """RHS of (15a)/(15b): (1/(α² M²)) Σ_d ξ_d ‖θ^{k+1-d} − θ^{k-d}‖²."""
+    xi = cfg.xi_vector()
+    return jnp.dot(xi, hist) / (cfg.alpha ** 2 * cfg.num_workers ** 2)
+
+
+# ---------------------------------------------------------------------------
+# Trigger rules (eq. 15) — return True ⇒ worker COMMUNICATES (violates the
+# skip condition)
+# ---------------------------------------------------------------------------
+
+def wk_communicate(grad_new: Pytree, grad_hat: Pytree,
+                   hist: jnp.ndarray, cfg: LAGConfig,
+                   *, sqnorm_fn=tree_sqnorm) -> jnp.ndarray:
+    """LAG-WK (15a): communicate iff ‖∇L_m(θ̂) − ∇L_m(θ^k)‖² > RHS.
+
+    ``sqnorm_fn`` is injectable so the distributed trainer can supply a
+    model-axis-psum'd (or Pallas-fused) squared-norm.
+    """
+    lhs = sqnorm_fn(tree_sub(grad_new, grad_hat))
+    return lhs > trigger_rhs(hist, cfg)
+
+
+def ps_communicate(theta: Pytree, theta_hat: Pytree, L_m: jnp.ndarray,
+                   hist: jnp.ndarray, cfg: LAGConfig,
+                   *, sqnorm_fn=tree_sqnorm) -> jnp.ndarray:
+    """LAG-PS (15b): communicate iff L_m² ‖θ̂_m − θ^k‖² > RHS."""
+    lhs = (L_m.astype(jnp.float32) ** 2) * sqnorm_fn(tree_sub(theta, theta_hat))
+    return lhs > trigger_rhs(hist, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Per-worker state transition
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class WorkerState:
+    """State worker m (or the server on m's behalf, for PS) must keep."""
+    grad_hat: Pytree            # ∇L_m(θ̂_m^{k-1})
+    theta_hat: Optional[Pytree]  # θ̂_m^{k-1}; only needed for the PS rule
+
+
+jax.tree_util.register_dataclass(
+    WorkerState, data_fields=["grad_hat", "theta_hat"], meta_fields=[])
+
+
+def worker_round(theta: Pytree, grad_new: Pytree, ws: WorkerState,
+                 hist: jnp.ndarray, cfg: LAGConfig, L_m=None,
+                 *, sqnorm_fn=tree_sqnorm):
+    """One LAG round for one worker.
+
+    Returns (communicate: bool scalar, delta: pytree, new_state).
+    ``delta`` is mask·(∇L_m(θ^k) − ∇L_m(θ̂_m^{k-1})) — exactly the upload
+    δ∇_m^k of eq. (4) when communicating, an all-zeros tree otherwise.
+
+    Note on LAG-PS semantics: under (15b) a skipped worker never *computes*
+    ∇L_m(θ^k).  In SPMD simulation we compute it anyway (vectorization) but
+    the returned ``communicate`` flag is what drives both the comm *and*
+    compute counters; the update below never reads grad_new when the flag is
+    False, so the trajectory is exactly the paper's.
+    """
+    if cfg.rule == "wk":
+        comm = wk_communicate(grad_new, ws.grad_hat, hist, cfg,
+                              sqnorm_fn=sqnorm_fn)
+    elif cfg.rule == "ps":
+        if L_m is None:
+            raise ValueError("LAG-PS requires per-worker smoothness L_m")
+        if ws.theta_hat is None:
+            raise ValueError("LAG-PS requires theta_hat in WorkerState")
+        comm = ps_communicate(theta, ws.theta_hat, L_m, hist, cfg,
+                              sqnorm_fn=sqnorm_fn)
+    else:
+        raise ValueError(f"unknown LAG rule {cfg.rule!r}")
+
+    raw_delta = tree_sub(grad_new, ws.grad_hat)
+    mask = comm.astype(jnp.float32)
+    delta = tree_scale(raw_delta, mask)
+    new_grad_hat = tree_add(ws.grad_hat, delta)   # == grad_new iff comm
+    if ws.theta_hat is not None:
+        new_theta_hat = tree_select(comm, theta, ws.theta_hat)
+    else:
+        new_theta_hat = None
+    return comm, delta, WorkerState(new_grad_hat, new_theta_hat)
+
+
+# ---------------------------------------------------------------------------
+# Server update (eq. 4)
+# ---------------------------------------------------------------------------
+
+def server_update(theta: Pytree, nabla: Pytree, sum_delta: Pytree,
+                  hist: jnp.ndarray, cfg: LAGConfig):
+    """θ^{k+1} = θ^k − α(∇^{k-1} + Σ_m δ∇_m^k); push ‖θ^{k+1}−θ^k‖² to hist."""
+    nabla_new = tree_add(nabla, sum_delta)
+    theta_new = jax.tree_util.tree_map(
+        lambda t, g: t - cfg.alpha * g, theta, nabla_new)
+    step_sqnorm = tree_sqnorm(tree_sub(theta_new, theta))
+    return theta_new, nabla_new, hist_push(hist, step_sqnorm)

@@ -1,0 +1,149 @@
+"""Parameter-server simulation driver for LAG and its baselines.
+
+Runs the paper's Sec.-4 experiments: full-batch distributed optimization of a
+``repro.core.convex.Problem`` under one of
+
+  gd       — batch gradient descent, all M workers upload each round (eq. 2)
+  lag-wk   — LAG with the worker-side trigger (15a)
+  lag-ps   — LAG with the server-side trigger (15b)
+  cyc-iag  — cyclic incremental aggregated gradient (one worker per round)
+  num-iag  — IAG with worker m sampled ∝ L_m (one worker per round)
+
+All five share the lazy-aggregation recursion (4); they differ only in the
+per-round communication mask.  The whole K-iteration run is one lax.scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lag
+from repro.core.convex import Problem
+
+ALGOS = ("gd", "lag-wk", "lag-ps", "cyc-iag", "num-iag")
+
+
+@dataclasses.dataclass
+class RunResult:
+    algo: str
+    losses: np.ndarray          # (K,) L(θ^k)
+    comm_mask: np.ndarray       # (K, M) bool — worker m uploaded at round k
+    opt_loss: float
+
+    @property
+    def comms_per_iter(self) -> np.ndarray:
+        return self.comm_mask.sum(axis=1)
+
+    @property
+    def cum_comms(self) -> np.ndarray:
+        return np.cumsum(self.comms_per_iter)
+
+    def iters_to(self, eps: float) -> Optional[int]:
+        err = self.losses - self.opt_loss
+        hit = np.nonzero(err <= eps)[0]
+        return int(hit[0]) if hit.size else None
+
+    def comms_to(self, eps: float) -> Optional[int]:
+        k = self.iters_to(eps)
+        return int(self.cum_comms[k]) if k is not None else None
+
+
+def run(problem: Problem, algo: str, *, K: int = 2000,
+        D: int = 10, xi: Optional[float] = None, alpha: Optional[float] = None,
+        seed: int = 0, theta0: Optional[jnp.ndarray] = None,
+        opt_loss: Optional[float] = None, l1: float = 0.0) -> RunResult:
+    """Simulate ``K`` rounds of ``algo`` on ``problem``.
+
+    Defaults follow the paper: α = 1/L for GD/LAG and 1/(M·L) for the IAG
+    variants; ξ = 1/D for LAG-WK and 10/D for LAG-PS; D = 10.
+
+    ``l1 > 0`` enables PROXIMAL LAG (the extension the paper flags in R2 /
+    Conclusions): the server applies soft-thresholding prox_{α·l1·‖·‖₁}
+    after every lazily aggregated step, and the reported "loss" becomes the
+    composite objective L(θ) + l1·‖θ‖₁.
+    """
+    if algo not in ALGOS:
+        raise ValueError(f"unknown algo {algo!r}")
+    M, d = problem.num_workers, problem.dim
+    if alpha is None:
+        alpha = 1.0 / (M * problem.L) if "iag" in algo else 1.0 / problem.L
+    if xi is None:
+        xi = (10.0 / D) if algo == "lag-ps" else (1.0 / D)
+    cfg = lag.LAGConfig(num_workers=M, alpha=float(alpha), D=D, xi=float(xi),
+                        rule="ps" if algo == "lag-ps" else "wk")
+
+    theta0 = jnp.zeros((d,), problem.X.dtype) if theta0 is None else theta0
+    # Initialization (paper Alg. 1/2 line 2): all workers upload at k=0.
+    g0 = problem.worker_grads(theta0)                      # (M, d)
+    state0 = dict(
+        theta=theta0,
+        nabla=jnp.sum(g0, axis=0),
+        grad_hat=g0,
+        theta_hat=jnp.broadcast_to(theta0, (M, d)),
+        hist=lag.hist_init(D),
+        key=jax.random.PRNGKey(seed),
+        k=jnp.zeros((), jnp.int32),
+    )
+    L_m = problem.L_m
+    p_num = L_m / jnp.sum(L_m)
+
+    def comm_mask_for(state, grads_new):
+        k, key = state["k"], state["key"]
+        if algo == "gd":
+            return jnp.ones((M,), bool), key
+        if algo == "cyc-iag":
+            return jnp.arange(M) == (k % M), key
+        if algo == "num-iag":
+            key, sub = jax.random.split(key)
+            m = jax.random.choice(sub, M, p=p_num)
+            return jnp.arange(M) == m, key
+        if algo == "lag-wk":
+            f = jax.vmap(lambda gn, gh: lag.wk_communicate(
+                gn, gh, state["hist"], cfg))
+            return f(grads_new, state["grad_hat"]), key
+        # lag-ps
+        f = jax.vmap(lambda th, lm: lag.ps_communicate(
+            state["theta"], th, lm, state["hist"], cfg))
+        return f(state["theta_hat"], L_m), key
+
+    def step(state, _):
+        theta = state["theta"]
+        loss = problem.loss(theta)
+        if l1 > 0.0:
+            loss = loss + l1 * jnp.sum(jnp.abs(theta))
+        grads_new = problem.worker_grads(theta)            # (M, d)
+        comm, key = comm_mask_for(state, grads_new)
+        maskf = comm.astype(jnp.float32)[:, None]
+        delta = maskf * (grads_new - state["grad_hat"])    # (M, d)
+        theta_new, nabla_new, hist_new = lag.server_update(
+            theta, state["nabla"], jnp.sum(delta, axis=0), state["hist"], cfg)
+        if l1 > 0.0:
+            # proximal step: soft-threshold at α·l1, then recompute the
+            # iterate-lag entry from the POST-prox movement
+            thr = cfg.alpha * l1
+            theta_prox = jnp.sign(theta_new) * jnp.maximum(
+                jnp.abs(theta_new) - thr, 0.0)
+            hist_new = lag.hist_push(
+                state["hist"], lag.tree_sqnorm(theta_prox - theta))
+            theta_new = theta_prox
+        new_state = dict(
+            theta=theta_new,
+            nabla=nabla_new,
+            grad_hat=state["grad_hat"] + delta,
+            theta_hat=jnp.where(maskf > 0, theta, state["theta_hat"]),
+            hist=hist_new,
+            key=key,
+            k=state["k"] + 1,
+        )
+        return new_state, (loss, comm)
+
+    _, (losses, comm_mask) = jax.jit(
+        lambda s: jax.lax.scan(step, s, None, length=K))(state0)
+    if opt_loss is None:
+        _, opt_loss = problem.optimum()
+    return RunResult(algo=algo, losses=np.asarray(losses),
+                     comm_mask=np.asarray(comm_mask), opt_loss=float(opt_loss))

@@ -1,0 +1,2 @@
+from repro.data.pipeline import (lm_batches, TokenStream, worker_shard,
+                                 make_inputs, make_heterogeneous_inputs)

@@ -1,0 +1,107 @@
+"""Deterministic synthetic data pipeline.
+
+Produces LM token batches (and the audio/VLM variants) without external
+datasets: a seeded Markov-ish token stream so the model has structure to
+learn (next-token loss decreases), deterministic per (seed, step, worker)
+so the distributed trainer's workers draw disjoint shards reproducibly —
+the property the LAG worker heterogeneity experiments rely on.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ModelConfig
+from repro.configs.shapes import vision_prefix
+
+
+@dataclasses.dataclass
+class TokenStream:
+    """Structured synthetic tokens: x_{t+1} = (a·x_t + drift_w) mod V with
+    per-position noise.  Different workers get different ``drift`` —
+    heterogeneous data shards (the paper's setting)."""
+    vocab: int
+    seed: int = 0
+
+    def batch(self, step: int, worker: int, batch: int, seq: int,
+              noise: float = 0.1) -> np.ndarray:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, worker]))
+        a = 6364136223846793005 % self.vocab
+        drift = 1 + 97 * worker
+        x = rng.integers(0, self.vocab, size=(batch, 1))
+        rows = [x]
+        for _ in range(seq - 1):
+            nxt = (rows[-1] * a + drift) % self.vocab
+            noise_toks = rng.integers(0, self.vocab, size=nxt.shape)
+            use_noise = rng.random(nxt.shape) < noise
+            rows.append(np.where(use_noise, noise_toks, nxt))
+        return np.concatenate(rows, axis=1).astype(np.int32)
+
+
+def worker_shard(global_batch: int, num_workers: int, worker: int) -> slice:
+    per = global_batch // num_workers
+    return slice(worker * per, (worker + 1) * per)
+
+
+def make_inputs(cfg: ModelConfig, stream: TokenStream, step: int,
+                batch: int, seq: int, worker: int = 0) -> dict:
+    """One training batch for any arch family."""
+    toks = stream.batch(step, worker, batch, seq + 1)
+    tokens, targets = toks[:, :-1], toks[:, 1:]
+    if cfg.family == "audio":
+        rng = np.random.default_rng(
+            np.random.SeedSequence([stream.seed, step, worker, 7]))
+        frames = rng.standard_normal((batch, seq, cfg.d_model)).astype(np.float32)
+        mask = rng.random((batch, seq)) < 0.08
+        return {"frames": jnp.asarray(frames, cfg.compute_dtype),
+                "mask": jnp.asarray(mask),
+                "targets": jnp.asarray(targets % cfg.vocab_size)}
+    if cfg.family == "vlm":
+        nv = vision_prefix(cfg, seq)
+        rng = np.random.default_rng(
+            np.random.SeedSequence([stream.seed, step, worker, 9]))
+        ve = rng.standard_normal((batch, nv, cfg.d_model)).astype(np.float32) * 0.02
+        base = np.broadcast_to(np.arange(seq)[None], (batch, seq))
+        return {"tokens": jnp.asarray(tokens[:, :seq - nv]),
+                "vision_embeds": jnp.asarray(ve, cfg.compute_dtype),
+                "positions3": jnp.asarray(np.broadcast_to(base[None], (3, batch, seq)).astype(np.int32)),
+                "targets": jnp.asarray(targets[:, :seq - nv])}
+    return {"tokens": jnp.asarray(tokens), "targets": jnp.asarray(targets)}
+
+
+def make_heterogeneous_inputs(cfg: ModelConfig, stream: TokenStream,
+                              step: int, num_workers: int, batch: int,
+                              seq: int, *, fixed: bool = True,
+                              noise_lo: float = 0.01, noise_hi: float = 0.4
+                              ) -> dict:
+    """Global batch whose worker shards (rows m·B/W:(m+1)·B/W, matching
+    ``repro.dist.split_batch``) have *heterogeneous predictability* —
+    worker m's stream has noise level interpolating noise_lo→noise_hi.
+    More-predictable shards ⇒ flatter per-worker loss ⇒ smaller effective
+    L_m — the heterogeneity LAG exploits (paper Lemma 4).  ``fixed=True``
+    reuses step 0's data every round (the paper's full-batch regime)."""
+    W = num_workers
+    per = batch // W
+    eff_step = 0 if fixed else step
+    shards = []
+    for m in range(W):
+        noise = noise_lo + (noise_hi - noise_lo) * m / max(W - 1, 1)
+        toks = stream.batch(eff_step, m, per, seq + 1, noise=noise)
+        shards.append(toks)
+    toks = np.concatenate(shards, axis=0)
+    tokens, targets = toks[:, :-1], toks[:, 1:]
+    return {"tokens": jnp.asarray(tokens), "targets": jnp.asarray(targets)}
+
+
+def lm_batches(cfg: ModelConfig, *, batch: int, seq: int, seed: int = 0,
+               worker: int = 0, start_step: int = 0) -> Iterator[dict]:
+    stream = TokenStream(vocab=cfg.vocab_size, seed=seed)
+    step = start_step
+    while True:
+        yield make_inputs(cfg, stream, step, batch, seq, worker)
+        step += 1

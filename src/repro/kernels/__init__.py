@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the compute hot-spots (CPU container validates
+them under interpret=True; ops.py wrappers fall back to ref.py on CPU)."""
+
+
+def on_tpu() -> bool:
+    import jax
+    return jax.default_backend() == "tpu"

@@ -1,0 +1,104 @@
+"""Blockwise (flash) attention forward in Pallas, TPU-targeted.
+
+Tiling: grid (B·H, S/bq, Skv/bk); the kv axis is the innermost sequential
+grid dim so the online-softmax running stats (m, l) and the output
+accumulator live in VMEM scratch across kv steps.  Block shapes are
+MXU-aligned (bq = bk = 128, full head_dim per block).  GQA is handled in
+the k/v index_map (query head h reads kv head h // q_per_kv) — no repeated
+K/V materialization in HBM, which is the main memory win over the XLA
+reference at 32k prefill.
+
+Causal and sliding-window masks are applied in-kernel.  Fully-masked
+(q-block, kv-block) pairs still occupy grid steps — skipping them via a
+dynamic grid is a recorded §Perf hypothesis, not done here.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale, causal, window, bq, bk, nk, s_q, s_kv):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)        # (bq, hd)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)        # (bk, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+
+    qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = (qpos < s_q) & (kpos < s_kv)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask, s, NEG)
+
+    m_prev = m_ref[...]                               # (bq, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)      # (bq, bk)
+    alpha = jnp.exp(m_prev - m_new)                   # (bq, 1)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    m_ref[...] = m_new
+
+    v = v_ref[0, :, 0, :].astype(jnp.float32)         # (bk, hd)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(p, v)
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_padded(q, k, v, *, causal=True, window=None,
+                           bq: int = 128, bk: int = 128, s_q=None, s_kv=None,
+                           interpret: bool = True):
+    """q (B,Sq,H,hd), k/v (B,Skv,KV,hd) with Sq % bq == Skv % bk == 0.
+    ``s_q``/``s_kv`` are the unpadded lengths (mask everything beyond)."""
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    qpk = H // KV
+    s_q = s_q or Sq
+    s_kv = s_kv or Skv
+    nq, nk = Sq // bq, Skv // bk
+    grid = (B * H, nq, nk)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=hd ** -0.5, causal=causal, window=window,
+        bq=bq, bk=bk, nk=nk, s_q=s_q, s_kv=s_kv)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, hd), lambda g, i, j: (g // H, i, g % H, 0)),
+            pl.BlockSpec((1, bk, 1, hd),
+                         lambda g, i, j: (g // H, j, (g % H) // qpk, 0)),
+            pl.BlockSpec((1, bk, 1, hd),
+                         lambda g, i, j: (g // H, j, (g % H) // qpk, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, hd),
+                               lambda g, i, j: (g // H, i, g % H, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),   # output accumulator
+            pltpu.VMEM((bq, 1), jnp.float32),    # running max m
+            pltpu.VMEM((bq, 1), jnp.float32),    # running denom l
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,34 @@
+"""jit'd wrapper: pads sequences to block multiples, dispatches to the
+Pallas kernel (interpret mode off-TPU), slices back."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import on_tpu
+from repro.kernels.flash_attention import ref
+from repro.kernels.flash_attention.flash_attention import flash_attention_padded
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "bq", "bk", "use_ref"))
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    bq: int = 128, bk: int = 128, use_ref: bool = False):
+    """q (B,S,H,hd), k/v (B,Skv,KV,hd) → (B,S,H,hd).  Arbitrary S."""
+    if use_ref:
+        return ref.attention(q, k, v, causal=causal, window=window)
+    B, S, H, hd = q.shape
+    Skv = k.shape[1]
+    bq = min(bq, max(8, S))
+    bk = min(bk, max(8, Skv))
+    pq = (-S) % bq
+    pk = (-Skv) % bk
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0))) if pq else q
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else k
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else v
+    out = flash_attention_padded(qp, kp, vp, causal=causal, window=window,
+                                 bq=bq, bk=bk, s_q=S, s_kv=Skv,
+                                 interpret=not on_tpu())
+    return out[:, :S]

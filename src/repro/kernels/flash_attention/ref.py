@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for flash attention (GQA, causal, sliding window)."""
+import jax
+import jax.numpy as jnp
+
+
+def attention(q, k, v, *, causal=True, window=None):
+    """q (B,S,H,hd); k,v (B,Skv,KV,hd); returns (B,S,H,hd)."""
+    B, S, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    qpk = H // KV
+    if qpk > 1:
+        k = jnp.repeat(k, qpk, axis=2)
+        v = jnp.repeat(v, qpk, axis=2)
+    logits = jnp.einsum("bqhk,bshk->bhqs", q, k).astype(jnp.float32)
+    logits *= hd ** -0.5
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((S, Skv), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqs,bshk->bqhk", w.astype(v.dtype), v)

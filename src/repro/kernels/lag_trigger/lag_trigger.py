@@ -1,0 +1,74 @@
+"""Pallas TPU kernel for the LAG trigger hot-spot.
+
+Every LAG round evaluates, per worker, ‖∇L_m(θ^k) − ∇L_m(θ̂_m)‖² over the
+whole gradient pytree (eq. 15a) and then conditionally applies the lazy
+update g_hat ← g_hat + mask·δ.  Done naively that is three HBM sweeps
+(diff, square-reduce, select).  This kernel fuses diff+square+reduce into
+ONE pass (both operands streamed through VMEM once), and a second kernel
+fuses the masked update (one read of each operand, one write).
+
+VMEM tiling: operands are viewed as (rows, 128) lanes and blocked
+(BLOCK_ROWS, 128) — sublane×lane aligned for the VPU; the scalar partial
+sum accumulates across the sequential grid in SMEM-resident (1,1) output.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+BLOCK_ROWS = 256          # (256, 128) f32 tile = 128 KiB/operand in VMEM
+
+
+def _sqnorm_kernel(a_ref, b_ref, out_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[0, 0] = jnp.zeros((), jnp.float32)
+
+    d = a_ref[...].astype(jnp.float32) - b_ref[...].astype(jnp.float32)
+    out_ref[0, 0] += jnp.sum(d * d)
+
+
+def delta_sqnorm_2d(a: jnp.ndarray, b: jnp.ndarray, *, interpret: bool = True
+                    ) -> jnp.ndarray:
+    """‖a − b‖² for (R, LANES)-shaped operands, R % BLOCK_ROWS == 0."""
+    R = a.shape[0]
+    grid = (R // BLOCK_ROWS,)
+    return pl.pallas_call(
+        _sqnorm_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+                  pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=interpret,
+    )(a, b)[0, 0]
+
+
+def _update_kernel(a_ref, b_ref, m_ref, out_ref):
+    m = m_ref[0, 0]
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    out_ref[...] = (b + m * (a - b)).astype(out_ref.dtype)
+
+
+def masked_update_2d(a: jnp.ndarray, b: jnp.ndarray, mask: jnp.ndarray,
+                     *, interpret: bool = True) -> jnp.ndarray:
+    """b + mask·(a − b) elementwise for (R, LANES) operands."""
+    R = a.shape[0]
+    grid = (R // BLOCK_ROWS,)
+    return pl.pallas_call(
+        _update_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+                  pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+                  pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(a.shape, b.dtype),
+        interpret=interpret,
+    )(a, b, mask.reshape(1, 1).astype(jnp.float32))

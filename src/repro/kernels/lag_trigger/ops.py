@@ -1,0 +1,53 @@
+"""jit'd public wrappers: arbitrary-shape / pytree entry points that pad and
+reshape into the kernel's (rows, 128) layout.  On CPU (no Mosaic) the
+kernels run in interpret mode; ``use_ref=True`` selects the jnp oracle."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import on_tpu
+from repro.kernels.lag_trigger import ref
+from repro.kernels.lag_trigger.lag_trigger import (BLOCK_ROWS, LANES,
+                                                   delta_sqnorm_2d,
+                                                   masked_update_2d)
+
+
+def _to_2d(x: jnp.ndarray) -> jnp.ndarray:
+    flat = x.reshape(-1)
+    chunk = BLOCK_ROWS * LANES
+    pad = (-flat.size) % chunk
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, LANES)
+
+
+@functools.partial(jax.jit, static_argnames=("use_ref",))
+def delta_sqnorm(g_new, g_old, *, use_ref: bool = False) -> jnp.ndarray:
+    """‖g_new − g_old‖² over a pytree (float32 scalar)."""
+    if use_ref:
+        return sum(ref.delta_sqnorm(a, b) for a, b in zip(
+            jax.tree_util.tree_leaves(g_new), jax.tree_util.tree_leaves(g_old)))
+    interp = not on_tpu()
+    total = jnp.zeros((), jnp.float32)
+    for a, b in zip(jax.tree_util.tree_leaves(g_new),
+                    jax.tree_util.tree_leaves(g_old)):
+        total += delta_sqnorm_2d(_to_2d(a), _to_2d(b), interpret=interp)
+    return total
+
+
+@functools.partial(jax.jit, static_argnames=("use_ref",))
+def masked_lazy_update(g_new, g_old, mask, *, use_ref: bool = False):
+    """g_hat ← g_old + mask·(g_new − g_old) over a pytree."""
+    if use_ref:
+        return jax.tree_util.tree_map(
+            lambda a, b: ref.masked_lazy_update(a, b, mask), g_new, g_old)
+    interp = not on_tpu()
+
+    def upd(a, b):
+        out2d = masked_update_2d(_to_2d(a), _to_2d(b), mask, interpret=interp)
+        return out2d.reshape(-1)[:a.size].reshape(a.shape).astype(b.dtype)
+
+    return jax.tree_util.tree_map(upd, g_new, g_old)

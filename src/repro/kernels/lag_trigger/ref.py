@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the LAG trigger kernel."""
+import jax.numpy as jnp
+
+
+def delta_sqnorm(g_new: jnp.ndarray, g_old: jnp.ndarray) -> jnp.ndarray:
+    """‖g_new − g_old‖² in float32 (flattened over all dims)."""
+    d = g_new.astype(jnp.float32) - g_old.astype(jnp.float32)
+    return jnp.sum(d * d)
+
+
+def masked_lazy_update(g_new, g_old, mask):
+    """g_hat ← g_old + mask·(g_new − g_old); mask is a () float/bool."""
+    m = mask.astype(jnp.float32)
+    out = g_old.astype(jnp.float32) + m * (g_new.astype(jnp.float32)
+                                           - g_old.astype(jnp.float32))
+    return out.astype(g_old.dtype)

@@ -1,0 +1,25 @@
+"""jit'd wrapper: arbitrary leading dims, row padding, CPU interpret."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import on_tpu
+from repro.kernels.rmsnorm import ref
+from repro.kernels.rmsnorm.rmsnorm import BLOCK_ROWS, rmsnorm_2d
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "use_ref"))
+def rmsnorm(x, scale, *, eps: float = 1e-6, use_ref: bool = False):
+    if use_ref:
+        return ref.rmsnorm(x, scale, eps)
+    shape = x.shape
+    d = shape[-1]
+    x2 = x.reshape(-1, d)
+    pad = (-x2.shape[0]) % BLOCK_ROWS
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    out = rmsnorm_2d(x2, scale, eps=eps, interpret=not on_tpu())
+    return out[:x.size // d].reshape(shape)

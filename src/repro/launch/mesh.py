@@ -1,0 +1,36 @@
+"""Production mesh builders.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state — the dry-run sets
+XLA_FLAGS before any jax initialization.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """TPU v5e target: 16×16 = 256 chips per pod; 2 pods = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_host_mesh():
+    """Whatever this host actually has — a 1×N mesh for tests/examples."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"), axis_types=_auto(2))
+
+
+def data_axes(mesh) -> tuple:
+    """The batch-sharding axes of a mesh (everything except 'model')."""
+    return tuple(n for n in mesh.axis_names if n != "model")
+
+
+def batch_shards(mesh) -> int:
+    import math
+    return math.prod(mesh.shape[a] for a in data_axes(mesh))

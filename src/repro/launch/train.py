@@ -1,0 +1,97 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \\
+      --algo lag-wk --steps 200 --batch 32 --seq 256 --workers 8
+
+Runs on whatever devices exist (1 CPU here; the TPU mesh via --mesh prod).
+Logs loss + LAG communication counters; checkpoints include LAG state.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import metrics as metrics_lib
+from repro.checkpoint import save, restore, latest_step
+from repro.configs import get_config
+from repro.data import TokenStream, make_inputs
+from repro.dist import (TrainerConfig, init_state, make_train_step,
+                        tree_shardings, batch_shardings)
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+
+
+def build_argparser():
+    p = argparse.ArgumentParser(description="LAG distributed trainer")
+    p.add_argument("--arch", default="llama3.2-1b")
+    p.add_argument("--algo", default="lag-wk",
+                   choices=["gd", "lag-wk", "lag-ps", "adam", "lag-adam"])
+    p.add_argument("--steps", type=int, default=100)
+    p.add_argument("--batch", type=int, default=32)
+    p.add_argument("--seq", type=int, default=256)
+    p.add_argument("--workers", type=int, default=8)
+    p.add_argument("--lr", type=float, default=0.3)
+    p.add_argument("--xi", type=float, default=0.1)
+    p.add_argument("--D", type=int, default=10)
+    p.add_argument("--reduced", action="store_true",
+                   help="CPU-sized variant of the arch")
+    p.add_argument("--mesh", default="host", choices=["host", "prod", "prod2"])
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--log", default=None)
+    p.add_argument("--ckpt-dir", default=None)
+    p.add_argument("--ckpt-every", type=int, default=0)
+    p.add_argument("--resume", action="store_true")
+    return p
+
+
+def main(argv=None):
+    args = build_argparser().parse_args(argv)
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    tcfg = TrainerConfig(algo=args.algo, num_workers=args.workers,
+                         lr=args.lr, D=args.D, xi=args.xi)
+    mesh = {"host": make_host_mesh,
+            "prod": lambda: make_production_mesh(multi_pod=False),
+            "prod2": lambda: make_production_mesh(multi_pod=True)}[args.mesh]()
+
+    state = init_state(jax.random.PRNGKey(args.seed), cfg, tcfg)
+    start = 0
+    if args.resume and args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+        state, start = restore(args.ckpt_dir, state)
+        print(f"resumed from step {start}")
+
+    train_step = make_train_step(cfg, tcfg)
+    with jax.set_mesh(mesh):
+        state_sh = tree_shardings(state, mesh)
+        state = jax.device_put(state, state_sh)
+        step_fn = jax.jit(train_step, donate_argnums=(0,))
+
+        stream = TokenStream(vocab=cfg.vocab_size, seed=args.seed)
+        log = metrics_lib.Logger(args.log)
+        t0 = time.time()
+        for step in range(start, args.steps):
+            batch = make_inputs(cfg, stream, step, args.batch, args.seq)
+            batch = jax.device_put(batch, batch_shardings(batch, mesh))
+            state, m = step_fn(state, batch)
+            if step % 10 == 0 or step == args.steps - 1:
+                log.log(step, loss=m["loss"],
+                        comm_round=m["comm_this_round"],
+                        comm_total=m["comm_total"])
+            if args.ckpt_every and args.ckpt_dir \
+                    and (step + 1) % args.ckpt_every == 0:
+                save(args.ckpt_dir, step + 1, state)
+        dt = time.time() - t0
+        W = tcfg.num_workers
+        total = int(jax.device_get(state["lag"]["comm_total"]))
+        rounds = args.steps - start
+        print(f"done: {rounds} rounds in {dt:.1f}s | uploads {total} "
+              f"vs GD {rounds * W} "
+              f"({100.0 * total / max(rounds * W, 1):.1f}% of GD)")
+    return state
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Pure-JAX model zoo spanning the six assigned architecture families."""
+from repro.models.common import ModelConfig
+from repro.models import model

@@ -1,0 +1,217 @@
+"""GQA attention: full-sequence (train/prefill) and single-token decode.
+
+Design notes for the TPU mesh (see DESIGN.md §6):
+* full-sequence path keeps activations sequence-sharded over the "model"
+  axis; K/V get all-gathered by GSPMD — sequence-parallel attention that
+  works for ANY head count (24/28-head archs don't divide the 16-way axis).
+* scores are computed in query chunks (lax.map) so the S×S logits are never
+  fully materialized — 32k prefill fits HBM.
+* decode path attends one token against an S-sharded KV cache.
+* ``use_pallas`` switches the full-sequence path to the Pallas flash kernel
+  (TPU target; CPU tests run it under interpret=True).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common, rope
+from repro.models.common import ModelConfig
+
+
+def init(key, cfg: ModelConfig) -> dict:
+    ks = common.split_keys(key, 5)
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    p = {
+        "wq": common.dense_init(ks[0], d, (H, hd), cfg.params_dtype),
+        "wk": common.dense_init(ks[1], d, (KV, hd), cfg.params_dtype),
+        "wv": common.dense_init(ks[2], d, (KV, hd), cfg.params_dtype),
+        "wo": common.dense_init(ks[3], H * hd, d, cfg.params_dtype).reshape(H, hd, d),
+    }
+    if cfg.use_bias:
+        p["bq"] = jnp.zeros((H, hd), cfg.params_dtype)
+        p["bk"] = jnp.zeros((KV, hd), cfg.params_dtype)
+        p["bv"] = jnp.zeros((KV, hd), cfg.params_dtype)
+    return p
+
+
+def _project_qkv(p, x, cfg: ModelConfig, cos, sin):
+    dt = cfg.compute_dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if cfg.use_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    if cfg.rope != "none":
+        q = rope.apply_rotary(q, cos, sin)
+        k = rope.apply_rotary(k, cos, sin)
+    return q, k, v
+
+
+def _expand_kv(k: jnp.ndarray, q_per_kv: int) -> jnp.ndarray:
+    """(B,S,KV,hd) → (B,S,KV*q_per_kv,hd) by repeat — GQA grouping."""
+    if q_per_kv == 1:
+        return k
+    return jnp.repeat(k, q_per_kv, axis=2)
+
+
+def full_attention(p: dict, x: jnp.ndarray, cfg: ModelConfig, *,
+                   cos, sin, positions: Optional[jnp.ndarray] = None,
+                   q_chunk: int = 512, return_kv: bool = False):
+    """Train/prefill attention. x (B,S,d) → (B,S,d).
+
+    Mask: causal if cfg.causal, plus sliding window if cfg.window; hubert
+    (encoder) uses causal=False.  ``positions`` (B,S) defaults to arange.
+    ``return_kv`` additionally returns the rotated (k, v) for cache-filling
+    prefill.
+    """
+    B, S, _ = x.shape
+    dt = cfg.compute_dtype
+    q, k, v = _project_qkv(p, x, cfg, cos, sin)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    if cfg.use_pallas:
+        from repro.kernels.flash_attention import ops as fa_ops
+        out = fa_ops.flash_attention(
+            q, k, v, causal=cfg.causal, window=cfg.window)
+    else:
+        out = _chunked_attention(q, k, v, positions, cfg, q_chunk)
+    y = jnp.einsum("bshk,hkd->bsd", out.astype(dt), p["wo"].astype(dt))
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def _chunked_attention(q, k, v, positions, cfg: ModelConfig, q_chunk: int):
+    """Memory-efficient reference attention: lax.map over query chunks so the
+    live logits tensor is (B,H,q_chunk,S) instead of (B,H,S,S)."""
+    B, S, H, hd = q.shape
+    k = _expand_kv(k, cfg.q_per_kv)
+    v = _expand_kv(v, cfg.q_per_kv)
+    scale = hd ** -0.5
+    q_chunk = min(q_chunk, S)
+    n_chunks = max(S // q_chunk, 1)
+    # pad S to multiple of q_chunk if needed (reduced test configs)
+    pad = n_chunks * q_chunk - S
+    if pad < 0:
+        n_chunks += 1
+        pad = n_chunks * q_chunk - S
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        qpos = jnp.pad(positions, ((0, 0), (0, pad)), constant_values=-1)
+    else:
+        qpos = positions
+    qs = q.reshape(B, n_chunks, q_chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    qps = qpos.reshape(B, n_chunks, q_chunk).transpose(1, 0, 2)
+
+    kpos = positions  # (B, S)
+
+    def one_chunk(args):
+        qc, qp = args                       # (B,c,H,hd), (B,c)
+        logits = jnp.einsum("bchk,bshk->bhcs", qc, k).astype(jnp.float32)
+        logits *= scale
+        mask = jnp.ones((B, qp.shape[1], S), bool)
+        if cfg.causal:
+            mask &= qp[:, :, None] >= kpos[:, None, :]
+        if cfg.window is not None:
+            mask &= (qp[:, :, None] - kpos[:, None, :]) < cfg.window
+        mask &= qp[:, :, None] >= 0         # padded queries attend nothing
+        logits = jnp.where(mask[:, None], logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1).astype(qc.dtype)
+        return jnp.einsum("bhcs,bshk->bchk", w, v)
+
+    if cfg.scan_unroll:   # calibration mode: no while loop in the HLO
+        out = jnp.stack([one_chunk((qs[i], qps[i]))
+                         for i in range(n_chunks)])
+    else:
+        out = jax.lax.map(one_chunk, (qs, qps))  # (n,B,c,H,hd)
+    out = out.transpose(1, 0, 2, 3, 4).reshape(B, n_chunks * q_chunk, H, hd)
+    return out[:, :S]
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token, KV cache)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> dict:
+    """KV cache for one attention layer.  For windowed attention, the cache
+    is a rolling buffer of size min(window, max_len)."""
+    dtype = dtype or cfg.compute_dtype
+    L = min(cfg.window, max_len) if cfg.window else max_len
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, L, kv, hd), dtype),
+        "v": jnp.zeros((batch, L, kv, hd), dtype),
+    }
+
+
+def fill_cache(cfg: ModelConfig, k: jnp.ndarray, v: jnp.ndarray,
+               max_len: int) -> dict:
+    """Build a decode cache holding a freshly prefilled sequence.
+
+    k/v (B,S,kv,hd).  Full caches are right-padded to max_len; windowed
+    caches keep the last L = min(window, max_len) rows laid out at slots
+    pos % L (the rolling layout decode_attention expects)."""
+    B, S = k.shape[0], k.shape[1]
+    L = min(cfg.window, max_len) if cfg.window else max_len
+    if not cfg.window:
+        pad = ((0, 0), (0, L - S), (0, 0), (0, 0))
+        return {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)}
+    take = min(L, S)
+    pos = jnp.arange(S - take, S)
+    slots = pos % L
+    buf_k = jnp.zeros((B, L) + k.shape[2:], k.dtype).at[:, slots].set(
+        k[:, S - take:])
+    buf_v = jnp.zeros((B, L) + v.shape[2:], v.dtype).at[:, slots].set(
+        v[:, S - take:])
+    return {"k": buf_k, "v": buf_v}
+
+
+def decode_attention(p: dict, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
+                     cfg: ModelConfig) -> Tuple[jnp.ndarray, dict]:
+    """x (B,1,d), pos () int32 → (y (B,1,d), new cache).
+
+    The new K/V row is written at ``pos`` (or pos % window for rolling
+    caches); attention masks out unwritten / out-of-window slots.
+    """
+    B = x.shape[0]
+    dt = cfg.compute_dtype
+    if cfg.rope != "none":
+        posb = jnp.broadcast_to(pos[None, None], (B, 1))
+        cos, sin = rope.rope_angles(posb, cfg.head_dim, cfg.rope_theta)
+    else:
+        cos = sin = None
+    q, k_new, v_new = _project_qkv(p, x, cfg, cos, sin)
+
+    Lc = cache["k"].shape[1]
+    slot = (pos % Lc).astype(jnp.int32)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, slot, 0, 0))
+
+    kq = _expand_kv(k, cfg.q_per_kv)
+    vq = _expand_kv(v, cfg.q_per_kv)
+    logits = jnp.einsum("bchk,bshk->bhcs", q, kq.astype(q.dtype))
+    logits = (logits * cfg.head_dim ** -0.5).astype(jnp.float32)
+
+    # slot i holds absolute position: i if no wrap, else the largest
+    # p ≤ pos with p % Lc == i.
+    idx = jnp.arange(Lc)
+    wrapped = pos >= Lc
+    abs_pos = jnp.where(wrapped,
+                        pos - ((slot - idx) % Lc),
+                        idx)
+    valid = abs_pos <= pos
+    if cfg.window is not None:
+        valid &= (pos - abs_pos) < cfg.window
+    logits = jnp.where(valid[None, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(dt)
+    out = jnp.einsum("bhcs,bshk->bchk", w, vq.astype(dt))
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+    return y, {"k": k, "v": v}

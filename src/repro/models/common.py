@@ -1,0 +1,185 @@
+"""Shared model machinery: config, init helpers, norms, activations.
+
+Models are pure-JAX pytrees (nested dicts of jnp arrays).  Sharding is
+assigned *by parameter path* via ``repro.dist.sharding`` rules, so init
+functions here stay annotation-free.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str                      # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    vocab_size: int
+    # attention (unused for pure-SSM)
+    num_heads: int = 0
+    num_kv_heads: int = 0
+    head_dim: int = 0
+    d_ff: int = 0
+    causal: bool = True
+    window: Optional[int] = None     # sliding-window size (local attention)
+    rope: str = "rope"               # rope | mrope | none
+    rope_theta: float = 500_000.0
+    # layer pattern within one scanned super-block, e.g. ("attn",) for dense,
+    # ("rglru", "rglru", "attn") for Griffin.  num_layers need not divide
+    # evenly; the remainder becomes an unscanned tail of block[0]-type layers.
+    block_pattern: Tuple[str, ...] = ("attn",)
+    # MoE
+    num_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    moe_seq_shards: int = 1          # MoE group reshape aligns with seq shards
+    # Mamba2 / SSD
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 256
+    ssm_conv: int = 4
+    # RG-LRU
+    rglru_expand: int = 1
+    # misc
+    norm: str = "rmsnorm"            # rmsnorm | layernorm
+    act: str = "swiglu"              # swiglu | gelu | geglu
+    use_bias: bool = False
+    tie_embeddings: bool = False
+    dtype: str = "float32"           # activation/compute dtype
+    param_dtype: str = "float32"
+    remat: bool = True
+    use_pallas: bool = False         # TPU kernels; CPU tests use XLA reference
+    # activation sharding constraints (perf knob, see EXPERIMENTS.md §Perf):
+    # () = let GSPMD propagate freely; ("data",) or ("pod","data") = pin the
+    # batch dim of layer activations; act_shard_seq additionally pins the
+    # sequence dim to "model" (sequence parallelism).
+    act_shard_axes: Tuple[str, ...] = ()
+    act_shard_seq: bool = False
+    # unroll the layer stack as a python loop instead of lax.scan — used by
+    # the dry-run's shallow calibration compiles so the HLO has no while
+    # loop (XLA's cost model counts while bodies once)
+    scan_unroll: bool = False
+    # embedding lookup as one_hot @ table instead of gather: with a
+    # vocab-sharded table, gather forces a full-table f32 all-gather +
+    # scatter-add grad; the matmul form keeps everything sharded
+    # (§Perf iteration 6 — standard TPU practice)
+    embed_onehot: bool = False
+
+    # --- derived -----------------------------------------------------------
+    @property
+    def compute_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def params_dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // max(self.num_kv_heads, 1)
+
+    @property
+    def num_superblocks(self) -> int:
+        return self.num_layers // len(self.block_pattern)
+
+    @property
+    def tail_layers(self) -> int:
+        return self.num_layers - self.num_superblocks * len(self.block_pattern)
+
+    @property
+    def d_inner(self) -> int:       # mamba2 inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def reduced(self, **kw) -> "ModelConfig":
+        """A small same-family variant for CPU smoke tests."""
+        small = dict(
+            num_layers=min(self.num_layers, len(self.block_pattern) * 2),
+            d_model=min(self.d_model, 256),
+            num_heads=min(self.num_heads, 4) if self.num_heads else 0,
+            num_kv_heads=min(self.num_kv_heads, 2) if self.num_kv_heads else 0,
+            head_dim=min(self.head_dim, 64) if self.head_dim else 0,
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            vocab_size=min(self.vocab_size, 512),
+            num_experts=min(self.num_experts, 4) if self.num_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
+            ssm_chunk=min(self.ssm_chunk, 32),
+            window=min(self.window, 64) if self.window else self.window,
+        )
+        small.update(kw)
+        return self.replace(**small)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dims, dtype) -> jnp.ndarray:
+    """Truncated-normal fan-in init, shape (in_dim, *out_dims)."""
+    if isinstance(out_dims, int):
+        out_dims = (out_dims,)
+    shape = (in_dim, *out_dims)
+    std = 1.0 / math.sqrt(in_dim)
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def layernorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def apply_norm(p: dict, x: jnp.ndarray, kind: str, eps: float = 1e-6,
+               use_pallas: bool = False) -> jnp.ndarray:
+    if kind == "rmsnorm":
+        if use_pallas:
+            from repro.kernels.rmsnorm import ops as rms_ops
+            return rms_ops.rmsnorm(x, p["scale"], eps=eps)
+        xf = x.astype(jnp.float32)
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * p["scale"]
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * p["scale"] + p["bias"]
+
+
+def activate(x_gate: jnp.ndarray, x_up: Optional[jnp.ndarray], act: str):
+    if act == "swiglu":
+        return jax.nn.silu(x_gate) * x_up
+    if act == "geglu":
+        return jax.nn.gelu(x_gate) * x_up
+    return jax.nn.gelu(x_gate)
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))

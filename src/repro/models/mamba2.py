@@ -1,0 +1,201 @@
+"""Mamba-2 mixer via the SSD (state-space duality) chunked algorithm
+[arXiv:2405.21060].
+
+The sequence is split into chunks of Q = cfg.ssm_chunk tokens.  Within a
+chunk the output is an attention-like masked matmul (MXU-friendly); across
+chunks a small (heads × headdim × d_state) state is carried by a scan —
+this is the block decomposition of Listing 1 in the paper, which is also
+the TPU-native layout (intra-chunk work hits the MXU; the sequential part
+touches only the tiny state).
+
+Single-token decode carries (conv window, SSM state) — O(1) per token,
+which is why mamba2 runs the long_500k shape.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import ModelConfig
+
+
+def _conv_dim(cfg: ModelConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_state
+
+
+def init(key, cfg: ModelConfig) -> dict:
+    ks = common.split_keys(key, 4)
+    d, di, ds, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    proj_out = 2 * di + 2 * ds + h          # [z, x, B, C, dt]
+    return {
+        "in_proj": common.dense_init(ks[0], d, proj_out, cfg.params_dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, _conv_dim(cfg)))
+                   * 0.1).astype(cfg.params_dtype),
+        "conv_b": jnp.zeros((_conv_dim(cfg),), cfg.params_dtype),
+        "A_log": jnp.zeros((h,), jnp.float32),        # A = -exp(A_log) = -1
+        "dt_bias": jnp.full((h,), -2.0, jnp.float32),  # softplus ≈ 0.12
+        "D": jnp.ones((h,), jnp.float32),
+        "norm_scale": jnp.ones((di,), cfg.params_dtype),
+        "out_proj": common.dense_init(ks[3], di, d, cfg.params_dtype),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jnp.ndarray):
+    di, ds, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:2 * di + 2 * ds]
+    dt = zxbcdt[..., 2 * di + 2 * ds:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray):
+    """Depthwise causal conv along S. xbc (B,S,C), w (K,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1]] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def _gated_norm(y: jnp.ndarray, z: jnp.ndarray, scale: jnp.ndarray,
+                eps: float = 1e-6):
+    y = y * jax.nn.silu(z.astype(y.dtype))
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    return (y.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(y.dtype) \
+        * scale.astype(y.dtype)
+
+
+def apply(p: dict, x: jnp.ndarray, cfg: ModelConfig,
+          return_state: bool = False):
+    """Full-sequence SSD. x (B,S,d) → (B,S,d). S must divide by ssm_chunk
+    (configs guarantee it; reduced test configs use chunk ≤ S).
+    ``return_state`` also returns the decode cache after the sequence."""
+    B, S0, _ = x.shape
+    di, ds, h, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    Q = min(cfg.ssm_chunk, S0)
+    # pad S to a chunk multiple; tail padding is causally inert and sliced off
+    pad = (-S0) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    S = S0 + pad
+    nc = S // Q
+    dt_ = cfg.compute_dtype
+
+    zxbcdt = x @ p["in_proj"].astype(dt_)
+    z, xbc_raw, dtr = _split_proj(cfg, zxbcdt)
+    xbc = _causal_conv(xbc_raw, p["conv_w"].astype(dt_),
+                       p["conv_b"].astype(dt_))
+    xs = xbc[..., :di]
+    Bs = xbc[..., di:di + ds]
+    Cs = xbc[..., di + ds:]
+
+    # float32 for the recurrence math
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])   # (B,S,h)
+    if pad:
+        # padded steps must be identity for the state recurrence:
+        # dt = 0 ⇒ a = 1, input contribution = 0
+        dt = dt * (jnp.arange(S) < S0)[None, :, None]
+    A = -jnp.exp(p["A_log"])                                       # (h,)
+    xh = xs.reshape(B, S, h, hd).astype(jnp.float32)
+    Bs32, Cs32 = Bs.astype(jnp.float32), Cs.astype(jnp.float32)
+
+    # chunk
+    xh = xh.reshape(B, nc, Q, h, hd)
+    Bc = Bs32.reshape(B, nc, Q, ds)
+    Cc = Cs32.reshape(B, nc, Q, ds)
+    dtc = dt.reshape(B, nc, Q, h)
+
+    log_a = dtc * A                                # (B,nc,Q,h) ≤ 0
+    cum = jnp.cumsum(log_a, axis=2)                # inclusive
+    xdt = xh * dtc[..., None]                      # (B,nc,Q,h,hd)
+
+    # intra-chunk (attention-like): M[q,k] = C_q·B_k · exp(cum_q − cum_k), q ≥ k
+    G = jnp.einsum("bcqs,bcks->bcqk", Cc, Bc)      # (B,nc,Q,Q)
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Q,Q,h)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(causal[None, None, :, :, None], jnp.exp(rel), 0.0)
+    Y_intra = jnp.einsum("bcqk,bcqkh,bckhp->bcqhp", G, L, xdt)
+
+    # chunk states and inter-chunk scan
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)            # (B,nc,Q,h)
+    states = jnp.einsum("bckh,bcks,bckhp->bchps", decay_to_end, Bc, xdt)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                    # (B,nc,h)
+
+    def scan_fn(H, inp):
+        st, cd = inp
+        H_out = H
+        H_new = cd[:, :, None, None] * H + st
+        return H_new, H_out
+
+    H0 = jnp.zeros((B, h, hd, ds), jnp.float32)
+    if cfg.scan_unroll:   # calibration mode: no while loop in the HLO
+        H = H0
+        hs = []
+        for c in range(nc):
+            H, h_out = scan_fn(H, (states[:, c], chunk_decay[:, c]))
+            hs.append(h_out)
+        H_last, H_in = H, jnp.stack(hs, axis=1)
+    else:
+        H_last, H_in = jax.lax.scan(
+            scan_fn, H0,
+            (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+        H_in = H_in.transpose(1, 0, 2, 3, 4)                   # (B,nc,h,hd,ds)
+
+    Y_inter = jnp.einsum("bcqs,bcqh,bchps->bcqhp", Cc, jnp.exp(cum), H_in)
+
+    Y = Y_intra + Y_inter + p["D"][:, None] * xh               # (B,nc,Q,h,hd)
+    Y = Y.reshape(B, S, di)[:, :S0].astype(dt_)
+    Y = _gated_norm(Y, z[:, :S0], p["norm_scale"])
+    out = Y @ p["out_proj"].astype(dt_)
+    if not return_state:
+        return out
+    K = cfg.ssm_conv
+    raw = xbc_raw[:, :S0]
+    if S0 >= K - 1:
+        conv_cache = raw[:, S0 - (K - 1):]
+    else:
+        conv_cache = jnp.pad(raw, ((0, 0), (K - 1 - S0, 0), (0, 0)))
+    return out, {"conv": conv_cache, "state": H_last}
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, dtype=None) -> dict:
+    dtype = dtype or cfg.compute_dtype
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, _conv_dim(cfg)), dtype),
+        "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_headdim,
+                            cfg.ssm_state), jnp.float32),
+    }
+
+
+def decode(p: dict, x: jnp.ndarray, cache: dict, cfg: ModelConfig
+           ) -> Tuple[jnp.ndarray, dict]:
+    """x (B,1,d) → (y (B,1,d), cache). O(1) state update."""
+    B = x.shape[0]
+    di, ds, h, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    dt_ = cfg.compute_dtype
+
+    zxbcdt = x[:, 0] @ p["in_proj"].astype(dt_)                # (B, .)
+    z, xbc, dtr = _split_proj(cfg, zxbcdt)
+    window = jnp.concatenate([cache["conv"], xbc[:, None]], 1)  # (B,K,Cd)
+    w = p["conv_w"].astype(dt_)
+    xbc = jax.nn.silu(jnp.einsum("bkc,kc->bc", window, w)
+                      + p["conv_b"].astype(dt_))
+    xs, Bs, Cs = xbc[:, :di], xbc[:, di:di + ds], xbc[:, di + ds:]
+
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])  # (B,h)
+    a = jnp.exp(dt * (-jnp.exp(p["A_log"])))                       # (B,h)
+    xh = xs.reshape(B, h, hd).astype(jnp.float32)
+    upd = jnp.einsum("bh,bhp,bs->bhps", dt, xh, Bs.astype(jnp.float32))
+    state = a[:, :, None, None] * cache["state"] + upd
+    y = jnp.einsum("bhps,bs->bhp", state, Cs.astype(jnp.float32))
+    y = y + p["D"][:, None] * xh
+    y = y.reshape(B, di).astype(dt_)
+    y = _gated_norm(y, z, p["norm_scale"])
+    y = (y @ p["out_proj"].astype(dt_))[:, None]
+    return y, {"conv": window[:, 1:], "state": state}

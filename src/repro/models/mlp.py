@@ -1,0 +1,35 @@
+"""Dense feed-forward: SwiGLU (llama family) or GELU (hubert)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import ModelConfig
+
+
+def init(key, cfg: ModelConfig) -> dict:
+    ks = common.split_keys(key, 3)
+    d, ff = cfg.d_model, cfg.d_ff
+    p = {"w_up": common.dense_init(ks[1], d, ff, cfg.params_dtype),
+         "w_down": common.dense_init(ks[2], ff, d, cfg.params_dtype)}
+    if cfg.act in ("swiglu", "geglu"):
+        p["w_gate"] = common.dense_init(ks[0], d, ff, cfg.params_dtype)
+    if cfg.use_bias:
+        p["b_up"] = jnp.zeros((ff,), cfg.params_dtype)
+        p["b_down"] = jnp.zeros((d,), cfg.params_dtype)
+    return p
+
+
+def apply(p: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    dt = cfg.compute_dtype
+    up = x @ p["w_up"].astype(dt)
+    if cfg.use_bias:
+        up = up + p["b_up"].astype(dt)
+    if cfg.act in ("swiglu", "geglu"):
+        h = common.activate(x @ p["w_gate"].astype(dt), up, cfg.act)
+    else:
+        h = common.activate(up, None, "gelu")
+    y = h @ p["w_down"].astype(dt)
+    if cfg.use_bias:
+        y = y + p["b_down"].astype(dt)
+    return y

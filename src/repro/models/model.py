@@ -1,0 +1,401 @@
+"""Model assembly: embeddings → scanned residual blocks → head.
+
+One composable stack covers all six assigned families via
+``cfg.block_pattern`` layer kinds:
+
+  dense  — preLN GQA attention + preLN FFN            (llama/granite/command-r/qwen2-vl/hubert)
+  moe    — preLN GQA attention + preLN MoE FFN        (qwen3-moe)
+  ssd    — preLN Mamba-2 SSD mixer                    (mamba2)
+  rec    — preLN RG-LRU recurrent block + preLN FFN   (recurrentgemma)
+  lattn  — preLN sliding-window attention + preLN FFN (recurrentgemma 1:2)
+
+Layers are scanned over "superblocks" (one repetition of the pattern) with
+stacked parameters; a remainder tail (e.g. recurrentgemma's 38 = 12·3 + 2)
+is applied unscanned.  ``jax.checkpoint`` wraps each superblock when
+cfg.remat (activation recomputation for the 4k-train memory budget).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, common, mamba2, mlp, moe, rglru, rope
+from repro.models.common import ModelConfig
+
+ATTN_KINDS = ("dense", "moe", "lattn")
+
+
+def _constrain_act(x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Pin activation sharding (B, S, d) per cfg.act_shard_axes — a §Perf
+    knob to stop GSPMD's involuntary resharding between layers."""
+    if not cfg.act_shard_axes:
+        return x
+    from jax.sharding import PartitionSpec as P
+    batch_axes = (cfg.act_shard_axes if len(cfg.act_shard_axes) > 1
+                  else cfg.act_shard_axes[0])
+    seq_axis = "model" if cfg.act_shard_seq else None
+    spec = P(batch_axes, seq_axis, *([None] * (x.ndim - 2)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ---------------------------------------------------------------------------
+# Layer init / apply
+# ---------------------------------------------------------------------------
+
+def _norm_init(cfg: ModelConfig):
+    if cfg.norm == "layernorm":
+        return common.layernorm_init(cfg.d_model, cfg.params_dtype)
+    return common.rmsnorm_init(cfg.d_model, cfg.params_dtype)
+
+
+def layer_init(key, kind: str, cfg: ModelConfig) -> dict:
+    ks = common.split_keys(key, 2)
+    p: Dict[str, Any] = {"norm1": _norm_init(cfg)}
+    if kind in ("dense", "lattn"):
+        p["attn"] = attention.init(ks[0], cfg)
+        p["norm2"] = _norm_init(cfg)
+        p["mlp"] = mlp.init(ks[1], cfg)
+    elif kind == "moe":
+        p["attn"] = attention.init(ks[0], cfg)
+        p["norm2"] = _norm_init(cfg)
+        p["moe"] = moe.init(ks[1], cfg)
+    elif kind == "ssd":
+        p["mixer"] = mamba2.init(ks[0], cfg)
+    elif kind == "rec":
+        p["rec"] = rglru.init(ks[0], cfg)
+        p["norm2"] = _norm_init(cfg)
+        p["mlp"] = mlp.init(ks[1], cfg)
+    else:
+        raise ValueError(f"unknown layer kind {kind!r}")
+    return p
+
+
+def layer_apply(p: dict, x: jnp.ndarray, kind: str, cfg: ModelConfig, *,
+                cos, sin, positions, cache_len: Optional[int] = None):
+    """Returns (x, aux_loss, cache_or_None).  ``cache_len`` requests a
+    filled decode cache (cache-building prefill)."""
+    aux = jnp.zeros((), jnp.float32)
+    cache = None
+    h = common.apply_norm(p["norm1"], x, cfg.norm, use_pallas=cfg.use_pallas)
+    if kind in ("dense", "lattn", "moe"):
+        if cache_len is not None:
+            y, (k, v) = attention.full_attention(
+                p["attn"], h, cfg, cos=cos, sin=sin, positions=positions,
+                return_kv=True)
+            cache = attention.fill_cache(cfg, k, v, cache_len)
+        else:
+            y = attention.full_attention(p["attn"], h, cfg, cos=cos, sin=sin,
+                                         positions=positions)
+        x = x + y
+        h2 = common.apply_norm(p["norm2"], x, cfg.norm, use_pallas=cfg.use_pallas)
+        if kind == "moe":
+            y2, aux = moe.apply(p["moe"], h2, cfg, seq_shards=cfg.moe_seq_shards)
+            x = x + y2
+        else:
+            x = x + mlp.apply(p["mlp"], h2, cfg)
+    elif kind == "ssd":
+        if cache_len is not None:
+            y, cache = mamba2.apply(p["mixer"], h, cfg, return_state=True)
+        else:
+            y = mamba2.apply(p["mixer"], h, cfg)
+        x = x + y
+    elif kind == "rec":
+        if cache_len is not None:
+            y, cache = rglru.apply(p["rec"], h, cfg, return_state=True)
+        else:
+            y = rglru.apply(p["rec"], h, cfg)
+        x = x + y
+        h2 = common.apply_norm(p["norm2"], x, cfg.norm, use_pallas=cfg.use_pallas)
+        x = x + mlp.apply(p["mlp"], h2, cfg)
+    return x, aux, cache
+
+
+def layer_cache_init(kind: str, cfg: ModelConfig, batch: int, max_len: int
+                     ) -> dict:
+    if kind in ("dense", "moe", "lattn"):
+        return attention.init_cache(cfg, batch, max_len)
+    if kind == "ssd":
+        return mamba2.init_cache(cfg, batch)
+    if kind == "rec":
+        return rglru.init_cache(cfg, batch)
+    raise ValueError(kind)
+
+
+def layer_decode(p: dict, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
+                 kind: str, cfg: ModelConfig) -> Tuple[jnp.ndarray, dict]:
+    h = common.apply_norm(p["norm1"], x, cfg.norm)
+    if kind in ("dense", "lattn"):
+        y, cache = attention.decode_attention(p["attn"], h, cache, pos, cfg)
+        x = x + y
+        h2 = common.apply_norm(p["norm2"], x, cfg.norm)
+        x = x + mlp.apply(p["mlp"], h2, cfg)
+    elif kind == "moe":
+        y, cache = attention.decode_attention(p["attn"], h, cache, pos, cfg)
+        x = x + y
+        h2 = common.apply_norm(p["norm2"], x, cfg.norm)
+        y, _ = moe.apply(p["moe"], h2, cfg, seq_shards=1)
+        x = x + y
+    elif kind == "ssd":
+        y, cache = mamba2.decode(p["mixer"], h, cache, cfg)
+        x = x + y
+    elif kind == "rec":
+        y, cache = rglru.decode(p["rec"], h, cache, cfg)
+        x = x + y
+        h2 = common.apply_norm(p["norm2"], x, cfg.norm)
+        x = x + mlp.apply(p["mlp"], h2, cfg)
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# Whole model
+# ---------------------------------------------------------------------------
+
+def init(key, cfg: ModelConfig) -> dict:
+    nsb, pat = cfg.num_superblocks, cfg.block_pattern
+    keys = jax.random.split(key, 4)
+    params: Dict[str, Any] = {}
+    if cfg.family != "audio":
+        params["embed"] = common.embed_init(keys[0], cfg.vocab_size,
+                                            cfg.d_model, cfg.params_dtype)
+    else:
+        params["mask_emb"] = jnp.zeros((cfg.d_model,), cfg.params_dtype)
+
+    def init_superblock(k):
+        ks = common.split_keys(k, len(pat))
+        return {str(i): layer_init(ks[i], kind, cfg)
+                for i, kind in enumerate(pat)}
+
+    sb_keys = jax.random.split(keys[1], nsb)
+    params["blocks"] = jax.vmap(init_superblock)(sb_keys)
+
+    tail_keys = jax.random.split(keys[2], max(cfg.tail_layers, 1))
+    params["tail"] = [layer_init(tail_keys[j], pat[j % len(pat)], cfg)
+                      for j in range(cfg.tail_layers)]
+
+    params["final_norm"] = _norm_init(cfg)
+    if not cfg.tie_embeddings:
+        params["head"] = common.dense_init(keys[3], cfg.d_model,
+                                           cfg.vocab_size, cfg.params_dtype)
+    return params
+
+
+def _lookup(emb: jnp.ndarray, tokens: jnp.ndarray, cfg: ModelConfig
+            ) -> jnp.ndarray:
+    dt = cfg.compute_dtype
+    if cfg.embed_onehot:
+        oh = jax.nn.one_hot(tokens, emb.shape[0], dtype=dt)
+        # align the one-hot with (batch→data, vocab→model) so the
+        # contraction reduce-scatters instead of materializing it
+        from jax.sharding import PartitionSpec as P
+        batch_axes = (cfg.act_shard_axes if len(cfg.act_shard_axes) > 1
+                      else cfg.act_shard_axes[0]) if cfg.act_shard_axes \
+            else "data"
+        try:
+            oh = jax.lax.with_sharding_constraint(
+                oh, P(batch_axes, None, "model"))
+        except RuntimeError:
+            pass   # no mesh context (single-device tests) — constraint moot
+        return oh @ emb.astype(dt)
+    return emb[tokens].astype(dt)
+
+
+def _embed_inputs(params: dict, cfg: ModelConfig, inputs: dict) -> jnp.ndarray:
+    dt = cfg.compute_dtype
+    if cfg.family == "audio":
+        x = inputs["frames"].astype(dt)
+        if "mask" in inputs:
+            x = jnp.where(inputs["mask"][..., None],
+                          params["mask_emb"].astype(dt), x)
+        return x
+    emb = params["embed"]
+    x = _lookup(emb, inputs["tokens"], cfg)
+    if cfg.family == "vlm" and "vision_embeds" in inputs:
+        x = jnp.concatenate([inputs["vision_embeds"].astype(dt), x], axis=1)
+    return x
+
+
+def _rope_angles(cfg: ModelConfig, inputs: dict, B: int, S: int):
+    if cfg.rope == "none":
+        return None, None, None
+    if cfg.rope == "mrope":
+        pos3 = inputs.get("positions3")
+        if pos3 is None:
+            base = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+            pos3 = jnp.broadcast_to(base[None], (3, B, S))
+        cos, sin = rope.mrope_angles(pos3, cfg.head_dim, cfg.rope_theta)
+        return cos, sin, pos3[0]
+    positions = inputs.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    cos, sin = rope.rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+    return cos, sin, positions
+
+
+def forward(params: dict, cfg: ModelConfig, inputs: dict
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward (train / prefill). Returns (logits, aux_loss)."""
+    x = _embed_inputs(params, cfg, inputs)
+    B, S, _ = x.shape
+    cos, sin, positions = (None, None, None)
+    if any(k in ATTN_KINDS for k in cfg.block_pattern):
+        cos, sin, positions = _rope_angles(cfg, inputs, B, S)
+
+    pat = cfg.block_pattern
+
+    x = _constrain_act(x, cfg)
+
+    def superblock(carry, block_params):
+        x, aux = carry
+        for i, kind in enumerate(pat):
+            x, a, _ = layer_apply(block_params[str(i)], x, kind, cfg,
+                                  cos=cos, sin=sin, positions=positions)
+            x = _constrain_act(x, cfg)
+            aux = aux + a
+        return (x, aux), None
+
+    body = jax.checkpoint(superblock) if cfg.remat else superblock
+    carry = (x, jnp.zeros((), jnp.float32))
+    if cfg.scan_unroll:
+        for i in range(cfg.num_superblocks):
+            bp = jax.tree_util.tree_map(lambda p: p[i], params["blocks"])
+            carry, _ = body(carry, bp)
+        (x, aux) = carry
+    else:
+        (x, aux), _ = jax.lax.scan(body, carry, params["blocks"])
+    for j, tp in enumerate(params["tail"][:cfg.tail_layers]):
+        x, a, _ = layer_apply(tp, x, pat[j % len(pat)], cfg,
+                              cos=cos, sin=sin, positions=positions)
+        aux = aux + a
+
+    x = common.apply_norm(params["final_norm"], x, cfg.norm,
+                          use_pallas=cfg.use_pallas)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = x @ head.astype(x.dtype)
+    return logits, aux
+
+
+def prefill(params: dict, cfg: ModelConfig, inputs: dict, max_len: int
+            ) -> Tuple[jnp.ndarray, dict]:
+    """Cache-building prefill: full forward that also returns the decode
+    cache (KV / SSM state / RNN state) so decoding continues at pos = S.
+    Returns (last-position logits (B,V), cache)."""
+    x = _embed_inputs(params, cfg, inputs)
+    B, S, _ = x.shape
+    cos, sin, positions = (None, None, None)
+    if any(k in ATTN_KINDS for k in cfg.block_pattern):
+        cos, sin, positions = _rope_angles(cfg, inputs, B, S)
+    pat = cfg.block_pattern
+
+    def superblock(x, block_params):
+        caches = {}
+        for i, kind in enumerate(pat):
+            x, _, c = layer_apply(block_params[str(i)], x, kind, cfg,
+                                  cos=cos, sin=sin, positions=positions,
+                                  cache_len=max_len)
+            caches[str(i)] = c
+        return x, caches
+
+    if cfg.scan_unroll:
+        caches = []
+        for i in range(cfg.num_superblocks):
+            bp = jax.tree_util.tree_map(lambda p: p[i], params["blocks"])
+            x, c = superblock(x, bp)
+            caches.append(c)
+        blocks_cache = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *caches)
+    else:
+        x, blocks_cache = jax.lax.scan(superblock, x, params["blocks"])
+    tail_cache = []
+    for j, tp in enumerate(params["tail"][:cfg.tail_layers]):
+        x, _, c = layer_apply(tp, x, pat[j % len(pat)], cfg,
+                              cos=cos, sin=sin, positions=positions,
+                              cache_len=max_len)
+        tail_cache.append(c)
+
+    x = common.apply_norm(params["final_norm"], x, cfg.norm,
+                          use_pallas=cfg.use_pallas)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits_last = x[:, -1] @ head.astype(x.dtype)
+    return logits_last, {"blocks": blocks_cache, "tail": tail_cache}
+
+
+# ---------------------------------------------------------------------------
+# Cache / decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    pat = cfg.block_pattern
+
+    def one_superblock(_):
+        return {str(i): layer_cache_init(kind, cfg, batch, max_len)
+                for i, kind in enumerate(pat)}
+
+    blocks = jax.vmap(one_superblock)(jnp.arange(cfg.num_superblocks))
+    tail = [layer_cache_init(pat[j % len(pat)], cfg, batch, max_len)
+            for j in range(cfg.tail_layers)]
+    return {"blocks": blocks, "tail": tail}
+
+
+def decode_step(params: dict, cfg: ModelConfig, cache: dict,
+                tokens: jnp.ndarray, pos: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, dict]:
+    """One decode step. tokens (B,1) int32, pos () int32 → (logits, cache)."""
+    dt = cfg.compute_dtype
+    x = _lookup(params["embed"], tokens, cfg)
+    pat = cfg.block_pattern
+
+    def superblock(x, scanned):
+        block_params, block_cache = scanned
+        new_cache = {}
+        for i, kind in enumerate(pat):
+            x, c = layer_decode(block_params[str(i)], x, block_cache[str(i)],
+                                pos, kind, cfg)
+            new_cache[str(i)] = c
+        return x, new_cache
+
+    if cfg.scan_unroll:
+        new_caches = []
+        for i in range(cfg.num_superblocks):
+            sl = jax.tree_util.tree_map(lambda p: p[i],
+                                        (params["blocks"], cache["blocks"]))
+            x, c = superblock(x, sl)
+            new_caches.append(c)
+        new_blocks = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *new_caches)
+    else:
+        x, new_blocks = jax.lax.scan(superblock, x,
+                                     (params["blocks"], cache["blocks"]))
+    new_tail = []
+    for j, (tp, tc) in enumerate(zip(params["tail"][:cfg.tail_layers],
+                                     cache["tail"])):
+        x, c = layer_decode(tp, x, tc, pos, pat[j % len(pat)], cfg)
+        new_tail.append(c)
+
+    x = common.apply_norm(params["final_norm"], x, cfg.norm)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = x @ head.astype(x.dtype)
+    return logits, {"blocks": new_blocks, "tail": new_tail}
+
+
+# ---------------------------------------------------------------------------
+# Losses / steps
+# ---------------------------------------------------------------------------
+
+def loss_fn(params: dict, cfg: ModelConfig, inputs: dict) -> jnp.ndarray:
+    """Cross-entropy (ignore targets < 0) + 0.01·MoE load-balance aux."""
+    logits, aux = forward(params, cfg, inputs)
+    targets = inputs["targets"]
+    if cfg.family == "vlm" and "vision_embeds" in inputs:
+        nv = inputs["vision_embeds"].shape[1]
+        pad = jnp.full(targets.shape[:1] + (nv,), -1, targets.dtype)
+        targets = jnp.concatenate([pad, targets], axis=1)
+    valid = targets >= 0
+    tgt = jnp.maximum(targets, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    nll = jnp.where(valid, nll, 0.0)
+    ce = jnp.sum(nll) / jnp.maximum(jnp.sum(valid), 1)
+    return ce + 0.01 * aux

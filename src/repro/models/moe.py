@@ -1,0 +1,92 @@
+"""Mixture-of-Experts layer (Qwen3-MoE style: 128 experts, top-8, softmax-
+then-topk routing with renormalized gates, SwiGLU experts, no shared expert).
+
+GShard/Switch-style capacity-based dispatch expressed as einsums so the
+layer is pure GSPMD (no shard_map): tokens are reshaped into groups
+(g = batch × seq-shards), each group dispatches into per-group expert
+capacity C = ceil(S_g · top_k · capacity_factor / E).  Expert weights are
+sharded expert-parallel over the "model" mesh axis; the g↔e einsum pair is
+where GSPMD inserts the all-to-all.
+
+Load-balancing auxiliary loss follows Switch (eq. density · density_proxy · E),
+returned alongside the output so the train step can add it.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import ModelConfig
+
+
+def init(key, cfg: ModelConfig) -> dict:
+    ks = common.split_keys(key, 4)
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    return {
+        "router": common.dense_init(ks[0], d, E, jnp.float32),
+        "w_gate": _expert_init(ks[1], E, d, ff, cfg.params_dtype),
+        "w_up": _expert_init(ks[2], E, d, ff, cfg.params_dtype),
+        "w_down": _expert_init(ks[3], E, ff, d, cfg.params_dtype),
+    }
+
+
+def _expert_init(key, E, din, dout, dtype):
+    std = 1.0 / math.sqrt(din)
+    return (std * jax.random.truncated_normal(key, -2., 2., (E, din, dout))).astype(dtype)
+
+
+def apply(p: dict, x: jnp.ndarray, cfg: ModelConfig,
+          seq_shards: int = 1) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (B,S,d) → (y (B,S,d), aux_loss scalar).
+
+    ``seq_shards``: number of sequence shards on the "model" mesh axis; the
+    group reshape (B,S,d) → (B·seq_shards, S/seq_shards, d) keeps groups
+    aligned with device boundaries so dispatch stays local.
+    """
+    B, S, d = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    dt = cfg.compute_dtype
+    g = B * seq_shards
+    Sg = S // seq_shards
+    xg = x.reshape(g, Sg, d)
+
+    logits = (xg.astype(jnp.float32) @ p["router"])            # (g,Sg,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)               # (g,Sg,K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    C = max(int(math.ceil(Sg * K * cfg.capacity_factor / E)), 1)
+
+    # position of each (token, k-slot) within its expert's capacity
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)       # (g,Sg,K,E)
+    flat = onehot.reshape(g, Sg * K, E)
+    pos_in_e = jnp.cumsum(flat, axis=1) * flat - 1              # (g,Sg*K,E)
+    pos_in_e = pos_in_e.reshape(g, Sg, K, E)
+    kept = (pos_in_e >= 0) & (pos_in_e < C)
+
+    # dispatch/combine tensors (g,Sg,E,C)
+    cap_oh = jax.nn.one_hot(jnp.clip(pos_in_e, 0, C - 1), C, dtype=dt)
+    keptf = kept.astype(dt)[..., None]
+    dispatch = jnp.einsum("gske,gskec->gsec", onehot.astype(dt),
+                          cap_oh * keptf)
+    combine = jnp.einsum("gsk,gske,gskec->gsec", gate_vals.astype(dt),
+                         onehot.astype(dt), cap_oh * keptf)
+
+    expert_in = jnp.einsum("gsec,gsd->egcd", dispatch, xg.astype(dt))
+    h_gate = jnp.einsum("egcd,edf->egcf", expert_in, p["w_gate"].astype(dt))
+    h_up = jnp.einsum("egcd,edf->egcf", expert_in, p["w_up"].astype(dt))
+    h = common.activate(h_gate, h_up, "swiglu")
+    expert_out = jnp.einsum("egcf,efd->egcd", h, p["w_down"].astype(dt))
+    y = jnp.einsum("gsec,egcd->gsd", combine, expert_out)
+
+    # Switch-style load-balance loss
+    density = jnp.mean(jnp.sum(jax.nn.one_hot(gate_idx[..., 0], E), axis=1)
+                       / Sg, axis=0)                             # (E,)
+    density_proxy = jnp.mean(probs.reshape(-1, E), axis=0)
+    aux = jnp.sum(density * density_proxy) * E
+
+    return y.reshape(B, S, d), aux.astype(jnp.float32)

@@ -1,0 +1,135 @@
+"""Griffin recurrent block with the Real-Gated LRU (RG-LRU)
+[arXiv:2402.19427] — the "rec" temporal-mixing layer of RecurrentGemma.
+
+Structure (paper Fig. 2):
+  u  = GELU(x W_y)                         # multiplicative branch
+  v  = causal_conv1d(x W_x)                # recurrent branch
+  r  = σ(blockdiag(v, W_a) + b_a)          # recurrence gate
+  i  = σ(blockdiag(v, W_i) + b_i)          # input gate
+  log a_t = c · r_t · log σ(Λ),  c = 8
+  h_t = a_t ⊙ h_{t-1} + √(1 − a_t²) ⊙ (i_t ⊙ v_t)
+  y  = (h ⊙ u) W_out
+
+The linear recurrence is computed with jax.lax.associative_scan (log-depth
+on TPU); decode carries (h, conv window) — O(1) per token, so the hybrid
+runs long_500k.  Gate projections are block-diagonal with
+cfg.num_heads blocks, as in the paper.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import ModelConfig
+
+_C = 8.0
+
+
+def _d_rnn(cfg: ModelConfig) -> int:
+    return cfg.rglru_expand * cfg.d_model
+
+
+def _n_blocks(cfg: ModelConfig) -> int:
+    return max(cfg.num_heads, 1)
+
+
+def init(key, cfg: ModelConfig) -> dict:
+    ks = common.split_keys(key, 6)
+    d, dr, nb = cfg.d_model, _d_rnn(cfg), _n_blocks(cfg)
+    bd = dr // nb
+    pdt = cfg.params_dtype
+    return {
+        "w_x": common.dense_init(ks[0], d, dr, pdt),
+        "w_y": common.dense_init(ks[1], d, dr, pdt),
+        "conv_w": (jax.random.normal(ks[2], (cfg.ssm_conv, dr)) * 0.1).astype(pdt),
+        "conv_b": jnp.zeros((dr,), pdt),
+        "w_a": common.dense_init(ks[3], bd, (nb, bd), pdt).transpose(1, 0, 2),
+        "b_a": jnp.zeros((dr,), jnp.float32),
+        "w_i": common.dense_init(ks[4], bd, (nb, bd), pdt).transpose(1, 0, 2),
+        "b_i": jnp.zeros((dr,), jnp.float32),
+        # Λ init so that a = σ(Λ)^c spreads over (0.1, 0.999) as in the paper
+        "lam": jnp.linspace(2.0, 8.0, dr).astype(jnp.float32),
+        "w_out": common.dense_init(ks[5], dr, d, pdt),
+    }
+
+
+def _blockdiag(v: jnp.ndarray, w: jnp.ndarray, nb: int) -> jnp.ndarray:
+    """v (..., dr) @ block-diagonal w (nb, bd, bd) → (..., dr)."""
+    shp = v.shape
+    vb = v.reshape(*shp[:-1], nb, shp[-1] // nb)
+    out = jnp.einsum("...nb,nbc->...nc", vb, w.astype(v.dtype))
+    return out.reshape(shp)
+
+
+def _gates(p: dict, v: jnp.ndarray, nb: int):
+    """Returns (log_a, gated_input) in float32."""
+    v32 = v.astype(jnp.float32)
+    r = jax.nn.sigmoid(_blockdiag(v32, p["w_a"], nb) + p["b_a"])
+    i = jax.nn.sigmoid(_blockdiag(v32, p["w_i"], nb) + p["b_i"])
+    log_a = _C * r * jax.nn.log_sigmoid(p["lam"])          # ≤ 0
+    a2 = jnp.exp(2.0 * log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12))
+    return log_a, beta * (i * v32)
+
+
+def apply(p: dict, x: jnp.ndarray, cfg: ModelConfig,
+          return_state: bool = False):
+    """Full-sequence recurrent block. x (B,S,d) → (B,S,d)."""
+    dt = cfg.compute_dtype
+    nb = _n_blocks(cfg)
+    u = jax.nn.gelu(x @ p["w_y"].astype(dt))
+    vx = x @ p["w_x"].astype(dt)
+    K = p["conv_w"].shape[0]
+    padded = jnp.pad(vx, ((0, 0), (K - 1, 0), (0, 0)))
+    v = sum(padded[:, i:i + vx.shape[1]] * p["conv_w"].astype(dt)[i]
+            for i in range(K)) + p["conv_b"].astype(dt)
+
+    log_a, b = _gates(p, v, nb)
+    a = jnp.exp(log_a)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (h.astype(dt) * u) @ p["w_out"].astype(dt)
+    if not return_state:
+        return y
+    S = vx.shape[1]
+    if S >= K - 1:
+        conv_cache = vx[:, S - (K - 1):]
+    else:
+        conv_cache = jnp.pad(vx, ((0, 0), (K - 1 - S, 0), (0, 0)))
+    return y, {"h": h[:, -1].astype(jnp.float32), "conv": conv_cache}
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, dtype=None) -> dict:
+    dtype = dtype or cfg.compute_dtype
+    return {
+        "h": jnp.zeros((batch, _d_rnn(cfg)), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, _d_rnn(cfg)), dtype),
+    }
+
+
+def decode(p: dict, x: jnp.ndarray, cache: dict, cfg: ModelConfig
+           ) -> Tuple[jnp.ndarray, dict]:
+    """x (B,1,d) → (y (B,1,d), cache)."""
+    dt = cfg.compute_dtype
+    nb = _n_blocks(cfg)
+    u = jax.nn.gelu(x[:, 0] @ p["w_y"].astype(dt))
+    vx = x[:, 0] @ p["w_x"].astype(dt)
+    window = jnp.concatenate([cache["conv"], vx[:, None]], 1)
+    v = jnp.einsum("bkc,kc->bc", window, p["conv_w"].astype(dt)) \
+        + p["conv_b"].astype(dt)
+    log_a, b = _gates(p, v, nb)
+    h = jnp.exp(log_a) * cache["h"] + b
+    y = ((h.astype(dt) * u) @ p["w_out"].astype(dt))[:, None]
+    return y, {"h": h, "conv": window[:, 1:]}

@@ -1,0 +1,66 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE.
+
+M-RoPE (arXiv:2409.12191): the head_dim/2 frequency pairs are split into
+three contiguous sections (temporal, height, width); each section takes its
+rotation angle from the corresponding component of a 3-D position id.  For
+pure-text positions all three components are equal and M-RoPE reduces to
+RoPE exactly (tested).
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax.numpy as jnp
+
+# Qwen2-VL default split of the 64 frequency pairs (head_dim 128).
+MROPE_SECTIONS = (16, 24, 24)
+
+
+def _inv_freq(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def rope_angles(positions: jnp.ndarray, head_dim: int, theta: float
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """positions (..., S) int → cos,sin (..., S, head_dim//2) float32."""
+    ang = positions[..., None].astype(jnp.float32) * _inv_freq(head_dim, theta)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_angles(positions3: jnp.ndarray, head_dim: int, theta: float,
+                 sections: Sequence[int] = MROPE_SECTIONS
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """positions3 (3, ..., S) → cos,sin (..., S, head_dim//2).
+
+    ``sections`` are in frequency-pair units and must sum to head_dim//2;
+    they are rescaled proportionally if the head_dim differs from 128
+    (reduced smoke-test configs).
+    """
+    half = head_dim // 2
+    if sum(sections) != half:
+        total = sum(sections)
+        scaled = [s * half // total for s in sections]
+        scaled[-1] += half - sum(scaled)
+        sections = scaled
+    cos, sin = rope_angles(positions3, head_dim, theta)  # (3, ..., S, half)
+    chunks_c, chunks_s = [], []
+    start = 0
+    for i, sec in enumerate(sections):
+        chunks_c.append(cos[i, ..., start:start + sec])
+        chunks_s.append(sin[i, ..., start:start + sec])
+        start += sec
+    return jnp.concatenate(chunks_c, -1), jnp.concatenate(chunks_s, -1)
+
+
+def apply_rotary(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray
+                 ) -> jnp.ndarray:
+    """x (B, S, H, head_dim); cos/sin (B, S, head_dim//2).
+
+    Uses the half-split convention (rotate_half), matching llama/qwen.
+    """
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[:, :, None, :].astype(x.dtype)
+    s = sin[:, :, None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)

@@ -1,0 +1,2 @@
+from repro.optim.optimizers import (OptState, sgd, adam, adamw, clip_by_global_norm,
+                                    cosine_schedule, constant_schedule, Optimizer)

@@ -1,0 +1,123 @@
+"""Optimizers from scratch (no optax in the container): SGD(+momentum),
+Adam/AdamW, global-norm clipping, LR schedules.  Functional: an Optimizer
+is (init_fn, update_fn) over pytrees; state shards like params.
+
+LAG interposes *before* the optimizer: the paper's method replaces the
+aggregated gradient with the lazily aggregated ∇^k (eq. 4).  The
+paper-faithful trainer uses plain SGD (θ ← θ − α∇^k); ``lag_adam`` in the
+trainer is a beyond-paper combination (noted in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Pytree], Pytree]
+    update: Callable[[Pytree, Pytree, Pytree, jnp.ndarray], tuple]
+    # update(grads, opt_state, params, step) -> (new_params, new_state)
+
+
+@dataclasses.dataclass
+class OptState:
+    inner: Pytree
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+def constant_schedule(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(lr: float, warmup: int, total: int, final_frac: float = 0.1):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac * lr + (1 - final_frac) * lr * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Transformations
+# ---------------------------------------------------------------------------
+
+def clip_by_global_norm(grads: Pytree, max_norm: float) -> Pytree:
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), grads)
+
+
+def sgd(lr, momentum: float = 0.0) -> Optimizer:
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    def update(grads, state, params, step):
+        a = sched(step)
+        if momentum == 0.0:
+            new_params = jax.tree_util.tree_map(
+                lambda p, g: p - (a * g).astype(p.dtype), params, grads)
+            return new_params, state
+        new_state = jax.tree_util.tree_map(
+            lambda m, g: momentum * m + g, state, grads)
+        new_params = jax.tree_util.tree_map(
+            lambda p, m: p - (a * m).astype(p.dtype), params, new_state)
+        return new_params, new_state
+
+    return Optimizer(init, update)
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"mu": jax.tree_util.tree_map(zeros, params),
+                "nu": jax.tree_util.tree_map(zeros, params)}
+
+    def update(grads, state, params, step):
+        a = sched(step)
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def upd(p, g, mu, nu):
+            g32 = g.astype(jnp.float32)
+            mu_n = b1 * mu + (1 - b1) * g32
+            nu_n = b2 * nu + (1 - b2) * jnp.square(g32)
+            delta = (mu_n / bc1) / (jnp.sqrt(nu_n / bc2) + eps)
+            if weight_decay:
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - a * delta).astype(p.dtype), mu_n, nu_n
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = jax.tree_util.tree_leaves(grads)
+        flat_mu = jax.tree_util.tree_leaves(state["mu"])
+        flat_nu = jax.tree_util.tree_leaves(state["nu"])
+        out = [upd(p, g, mu, nu) for p, g, mu, nu
+               in zip(flat_p, flat_g, flat_mu, flat_nu)]
+        new_params = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+        new_mu = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+        new_nu = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+        return new_params, {"mu": new_mu, "nu": new_nu}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, weight_decay: float = 0.01, **kw) -> Optimizer:
+    return adam(lr, weight_decay=weight_decay, **kw)

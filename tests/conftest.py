@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests see the real device topology (1 CPU device) — the 512-device flag is
+# set ONLY inside repro.launch.dryrun / subprocess tests.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,68 @@
+"""Collective-bytes HLO parser unit tests."""
+from repro.dist.hlo_analysis import collective_bytes, _shape_bytes
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[128,4]") == 128 * 4 * 4
+    assert _shape_bytes("bf16[10]") == 20
+    assert _shape_bytes("(f32[4], bf16[2])") == 16 + 4
+
+
+def test_all_reduce_ring_estimate():
+    hlo = """
+ENTRY %main {
+  %ar = f32[1024]{0} all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%add
+}
+"""
+    st = collective_bytes(hlo)
+    # 2 · 4096B · 3/4 = 6144
+    assert abs(st.by_kind["all-reduce"] - 6144.0) < 1e-6
+    assert st.by_kind_count["all-reduce"] == 1
+
+
+def test_all_gather_and_permute():
+    hlo = """
+  %ag = bf16[64,256]{1,0} all-gather(%y), replica_groups={{0,1},{2,3}}, dimensions={0}
+  %cp = f32[128]{0} collective-permute(%z), source_target_pairs={{0,1},{1,0}}
+"""
+    st = collective_bytes(hlo)
+    assert abs(st.by_kind["all-gather"] - 64 * 256 * 2 * 0.5) < 1e-6
+    assert st.by_kind["collective-permute"] == 512.0
+
+
+def test_start_done_counted_once():
+    hlo = """
+  %ars = f32[100]{0} all-reduce-start(%x), replica_groups={{0,1}}
+  %ard = f32[100]{0} all-reduce-done(%ars)
+"""
+    st = collective_bytes(hlo)
+    assert st.by_kind_count["all-reduce"] == 1
+
+
+def test_cross_pod_classification():
+    hlo = """
+  %a = f32[100]{0} all-reduce(%x), replica_groups={{0,1}}, to_apply=%add
+  %b = f32[100]{0} all-reduce(%y), replica_groups={{0,4}}, to_apply=%add
+"""
+    st = collective_bytes(hlo, pod_size=4)
+    assert st.cross_pod_bytes > 0
+    assert st.cross_pod_bytes < st.total_bytes
+
+
+def test_iota_replica_groups():
+    hlo = """
+  %a = f32[256]{0} all-reduce(%x), replica_groups=[2,2]<=[4], to_apply=%add
+"""
+    st = collective_bytes(hlo, pod_size=2)
+    assert st.by_kind_count["all-reduce"] == 1
+    # groups [[0,1],[2,3]] with pod_size=2 → no crossing
+    assert st.cross_pod_bytes == 0.0
+
+
+def test_non_collectives_ignored():
+    hlo = """
+  %d = f32[8,8]{1,0} dot(%a, %b)
+  %c = f32[8]{0} add(%e, %f)
+"""
+    st = collective_bytes(hlo)
+    assert st.total_bytes == 0.0

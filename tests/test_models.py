@@ -1,0 +1,184 @@
+"""Per-architecture smoke tests (reduced variants) + cache consistency.
+
+Every assigned arch: instantiate the REDUCED same-family variant, run one
+forward and one train step on CPU, assert output shapes and no NaNs.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED, get_config
+from repro.configs.shapes import applicable, concrete_inputs
+from repro.models import model
+
+B, S = 2, 64
+
+
+@pytest.fixture(scope="module")
+def built():
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = get_config(arch).reduced()
+            params = model.init(jax.random.PRNGKey(0), cfg)
+            cache[arch] = (cfg, params)
+        return cache[arch]
+    return get
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_forward_shapes_no_nan(arch, built):
+    cfg, params = built(arch)
+    inputs = concrete_inputs(cfg, "train_4k", batch=B, seq=S)
+    logits, aux = model.forward(params, cfg, inputs)
+    exp_S = S if cfg.family != "vlm" else S  # vision prefix included
+    assert logits.shape == (B, exp_S, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+    assert not bool(jnp.isnan(aux))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_train_step_no_nan(arch, built):
+    cfg, params = built(arch)
+    inputs = concrete_inputs(cfg, "train_4k", batch=B, seq=S)
+    loss, grads = jax.value_and_grad(model.loss_fn)(params, cfg, inputs)
+    assert np.isfinite(float(loss))
+    leaves = jax.tree_util.tree_leaves(grads)
+    assert all(bool(jnp.isfinite(l).all()) for l in leaves)
+    gnorm = sum(float(jnp.sum(jnp.square(l.astype(jnp.float32)))) for l in leaves)
+    assert gnorm > 0.0
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_decode_step_shapes(arch, built):
+    cfg, params = built(arch)
+    ok, _ = applicable(cfg, "decode_32k")
+    if not ok:
+        pytest.skip("no decode step for this family")
+    cache = model.init_cache(cfg, B, S)
+    tokens = jnp.zeros((B, 1), jnp.int32)
+    logits, cache2 = model.decode_step(params, cfg, cache, tokens,
+                                       jnp.zeros((), jnp.int32))
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+    assert jax.tree_util.tree_structure(cache) == \
+        jax.tree_util.tree_structure(cache2)
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "mamba2-370m",
+                                  "recurrentgemma-9b", "llama3.2-1b-sw"])
+def test_decode_matches_forward(arch):
+    cfg = get_config(arch).reduced(dtype="float32", param_dtype="float32")
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, 32), 0,
+                              cfg.vocab_size)
+    full, _ = model.forward(params, cfg, {"tokens": toks})
+    cache = model.init_cache(cfg, B, 32)
+    step = jax.jit(lambda c, t, p: model.decode_step(params, cfg, c, t, p))
+    outs = []
+    for t in range(32):
+        lg, cache = step(cache, toks[:, t:t + 1], jnp.asarray(t, jnp.int32))
+        outs.append(lg[:, 0])
+    err = float(jnp.max(jnp.abs(full - jnp.stack(outs, 1))))
+    assert err < 5e-4, err
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "mamba2-370m",
+                                  "recurrentgemma-9b"])
+def test_prefill_then_decode_continues(arch):
+    cfg = get_config(arch).reduced(dtype="float32", param_dtype="float32")
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    S0, G = 24, 8
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S0 + G), 0,
+                              cfg.vocab_size)
+    full, _ = model.forward(params, cfg, {"tokens": toks})
+    last, cache = model.prefill(params, cfg, {"tokens": toks[:, :S0]},
+                                max_len=S0 + G)
+    assert float(jnp.max(jnp.abs(last - full[:, S0 - 1]))) < 5e-4
+    for t in range(S0, S0 + G):
+        lg, cache = model.decode_step(params, cfg, cache, toks[:, t:t + 1],
+                                      jnp.asarray(t, jnp.int32))
+        assert float(jnp.max(jnp.abs(lg[:, 0] - full[:, t]))) < 5e-4
+
+
+def test_moe_dropless_decode_matches_forward():
+    cfg = get_config("qwen3-moe-30b-a3b").reduced(
+        dtype="float32", param_dtype="float32", capacity_factor=16.0)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, 16), 0,
+                              cfg.vocab_size)
+    full, _ = model.forward(params, cfg, {"tokens": toks})
+    cache = model.init_cache(cfg, B, 16)
+    for t in range(16):
+        lg, cache = model.decode_step(params, cfg, cache, toks[:, t:t + 1],
+                                      jnp.asarray(t, jnp.int32))
+        assert float(jnp.max(jnp.abs(lg[:, 0] - full[:, t]))) < 5e-4
+
+
+def test_mrope_reduces_to_rope_on_text():
+    from repro.models import rope
+    pos = jnp.arange(16)[None]
+    pos3 = jnp.broadcast_to(pos[None], (3, 1, 16))
+    c1, s1 = rope.rope_angles(pos, 64, 1e4)
+    c3, s3 = rope.mrope_angles(pos3, 64, 1e4)
+    np.testing.assert_allclose(c1, c3, rtol=1e-6)
+    np.testing.assert_allclose(s1, s3, rtol=1e-6)
+
+
+def test_vlm_vision_prefix_changes_output():
+    cfg = get_config("qwen2-vl-7b").reduced(dtype="float32",
+                                            param_dtype="float32")
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    inputs = concrete_inputs(cfg, "train_4k", batch=B, seq=S)
+    logits, _ = model.forward(params, cfg, inputs)
+    inputs2 = dict(inputs)
+    inputs2["vision_embeds"] = inputs["vision_embeds"] + 1.0
+    logits2, _ = model.forward(params, cfg, inputs2)
+    assert float(jnp.max(jnp.abs(logits - logits2))) > 1e-4
+
+
+def test_sliding_window_masks_long_range():
+    cfg = get_config("llama3.2-1b-sw").reduced(
+        dtype="float32", param_dtype="float32", window=8, num_layers=2)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 48), 0,
+                              cfg.vocab_size)
+    base, _ = model.forward(params, cfg, {"tokens": toks})
+    # perturbing a token far outside every window of the last position
+    # cannot change its logits (2 layers × window 8 → receptive field ≤ 16)
+    toks2 = toks.at[0, 0].set((toks[0, 0] + 1) % cfg.vocab_size)
+    pert, _ = model.forward(params, cfg, {"tokens": toks2})
+    np.testing.assert_allclose(base[0, -1], pert[0, -1], atol=1e-5)
+    # ...but a token inside the window does
+    toks3 = toks.at[0, -2].set((toks[0, -2] + 1) % cfg.vocab_size)
+    pert3, _ = model.forward(params, cfg, {"tokens": toks3})
+    assert float(jnp.max(jnp.abs(base[0, -1] - pert3[0, -1]))) > 1e-6
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "mamba2-370m",
+                                  "recurrentgemma-9b"])
+def test_scan_unroll_equivalent(arch):
+    """The dry-run's calibration mode (python-loop layers) must match the
+    production lax.scan bit-for-bit up to float assoc."""
+    cfg = get_config(arch).reduced(dtype="float32", param_dtype="float32")
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                              cfg.vocab_size)
+    a, _ = model.forward(params, cfg, {"tokens": toks})
+    b, _ = model.forward(params, cfg.replace(scan_unroll=True),
+                         {"tokens": toks})
+    assert float(jnp.max(jnp.abs(a - b))) < 1e-4
+
+
+def test_embed_onehot_equivalent():
+    cfg = get_config("llama3.2-1b").reduced(dtype="float32",
+                                            param_dtype="float32")
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                              cfg.vocab_size)
+    a, _ = model.forward(params, cfg, {"tokens": toks})
+    b, _ = model.forward(params, cfg.replace(embed_onehot=True),
+                         {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)

@@ -1,0 +1,97 @@
+"""Property-based tests (hypothesis) on LAG's system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import convex, lag, simulate
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+@st.composite
+def problems(draw):
+    M = draw(st.integers(2, 6))
+    d = draw(st.integers(2, 8))
+    seed = draw(st.integers(0, 10_000))
+    kind = draw(st.sampled_from(["linreg", "logreg"]))
+    lam = 1e-3 if kind == "logreg" else 0.0
+    return convex.synthetic(kind, num_workers=M, n_per=12, d=d,
+                            L_targets=[draw(st.floats(0.5, 50.0))
+                                       for _ in range(M)],
+                            lam=lam, seed=seed)
+
+
+@given(problems(), st.sampled_from(simulate.ALGOS), st.integers(3, 25))
+def test_nabla_is_sum_of_grad_hats(prob, algo, K):
+    """Invariant of eq. (4): the server's ∇^k always equals Σ_m ∇L_m(θ̂_m)
+    — the lazy aggregate never drifts from the per-worker stale gradients,
+    under any trigger pattern / algorithm."""
+    r = simulate.run(prob, algo, K=K)
+    # re-simulate manually to access final state: rerun with same seed and
+    # verify via a fresh rollout using the recorded comm mask
+    theta = jnp.zeros((prob.dim,), prob.X.dtype)
+    M = prob.num_workers
+    alpha = 1.0 / (M * prob.L) if "iag" in algo else 1.0 / prob.L
+    grad_hat = prob.worker_grads(theta)
+    nabla = jnp.sum(grad_hat, axis=0)
+    for k in range(K):
+        g = prob.worker_grads(theta)
+        mask = jnp.asarray(r.comm_mask[k], jnp.float32)[:, None]
+        delta = mask * (g - grad_hat)
+        nabla = nabla + jnp.sum(delta, axis=0)
+        grad_hat = grad_hat + delta
+        theta = theta - alpha * nabla
+        np.testing.assert_allclose(np.asarray(nabla),
+                                   np.asarray(jnp.sum(grad_hat, 0)),
+                                   rtol=1e-4, atol=1e-5)
+
+
+@given(problems(), st.integers(5, 40))
+def test_comm_counts_bounded(prob, K):
+    r = simulate.run(prob, "lag-wk", K=K)
+    per_iter = r.comm_mask.sum(axis=1)
+    assert (per_iter <= prob.num_workers).all()
+    assert (per_iter >= 0).all()
+    # round 0 communicates nothing: the init upload already delivered
+    # ∇L_m(θ⁰) (hist = 0 ⇒ rhs = 0, but δ∇ = 0 too)
+    assert per_iter[0] == 0
+
+
+@given(problems())
+def test_xi_zero_equals_gd(prob):
+    r_gd = simulate.run(prob, "gd", K=30)
+    r_lag = simulate.run(prob, "lag-wk", K=30, xi=0.0)
+    np.testing.assert_allclose(r_lag.losses, r_gd.losses,
+                               rtol=1e-4, atol=1e-6)
+
+
+@given(problems())
+def test_losses_bounded_and_decreasing_envelope(prob):
+    """LAG with paper stepsize never diverges on smooth convex problems."""
+    r = simulate.run(prob, "lag-wk", K=60)
+    assert np.isfinite(r.losses).all()
+    assert r.losses[-1] <= r.losses[0] + 1e-6
+
+
+@given(st.integers(1, 6), st.integers(0, 3))
+def test_hist_push_shifts(D, n):
+    h = lag.hist_init(D)
+    vals = [float(i + 1) for i in range(n)]
+    for v in vals:
+        h = lag.hist_push(h, jnp.asarray(v))
+    expect = (vals[::-1] + [0.0] * D)[:D]
+    np.testing.assert_allclose(np.asarray(h), expect)
+
+
+@given(st.data())
+def test_split_batch_roundtrip(data):
+    from repro.dist import split_batch
+    W = data.draw(st.sampled_from([1, 2, 4]))
+    B = W * data.draw(st.integers(1, 3))
+    S = data.draw(st.integers(2, 10))
+    toks = jnp.arange(B * S).reshape(B, S)
+    out = split_batch({"tokens": toks}, W)["tokens"]
+    assert out.shape == (W, B // W, S)
+    np.testing.assert_array_equal(out.reshape(B, S), toks)

@@ -1,0 +1,110 @@
+"""Sharding rules: explicit rules, divisibility fallbacks, protected dims."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import spec_for, batch_specs, tree_specs
+
+
+class FakeMesh:
+    """Duck-typed mesh: axis_names + shape mapping (no devices needed)."""
+    def __init__(self, shape):
+        self.axis_names = tuple(shape)
+        self.shape = dict(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH3 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_moe_expert_parallel():
+    # experts over model; contracting dims UNSHARDED (§Perf iteration 4:
+    # data-sharded contracting dims emit activation partial-sum reduces)
+    spec = spec_for("['params']['blocks']['0']['moe']['w_up']",
+                    (48, 128, 2048, 768), MESH)
+    assert spec == P(None, "model", None, None)
+
+
+def test_moe_235b_memory_gate_adds_second_axis():
+    # a leaf still >2 GiB/device after model-sharding gets a data axis —
+    # HBM trumps the partial-sum cost at 235B scale
+    spec = spec_for("['params']['blocks']['0']['moe']['w_up']",
+                    (94, 128, 4096, 1536), MESH)
+    assert spec == P(None, "model", "data", None)
+
+
+def test_attention_head_sharding():
+    spec = spec_for("['params']['blocks']['0']['attn']['wq']",
+                    (16, 2048, 32, 64), MESH)
+    assert spec == P(None, None, "model", None)
+
+
+def test_embed_vocab_sharding():
+    spec = spec_for("['params']['embed']", (128256, 2048), MESH)
+    assert spec == P("model", None)
+
+
+def test_vocab_indivisible_falls_back():
+    # mamba2 vocab 50280 % 16 ≠ 0 → vocab unsharded (table replicated;
+    # d stays unsharded too — it is a contracting dim)
+    spec = spec_for("['params']['embed']", (50280, 1024), MESH)
+    assert spec == P(None, None)
+
+
+def test_grad_hat_worker_dim_protected():
+    # LAG state keeps 2-D sharding (it is never contracted)
+    spec = spec_for("['lag']['grad_hat']['blocks']['0']['attn']['wq']",
+                    (4, 16, 2048, 32, 64), MESH)
+    assert spec[0] is None and spec[1] is None
+    assert "model" in spec and any(sp == "data" for sp in spec)
+
+
+def test_kv_cache_sequence_sharded():
+    spec = spec_for("['blocks']['0']['k']", (16, 128, 32768, 8, 128), MESH)
+    assert spec == P(None, "data", "model", None, None)
+
+
+def test_kv_cache_batch1_replicated():
+    spec = spec_for("['blocks']['0']['k']", (16, 1, 524288, 8, 128), MESH)
+    assert spec == P(None, None, "model", None, None)
+
+
+def test_multipod_data_axes_tuple():
+    # state leaves use the flattened (pod, data) tuple on multi-pod meshes
+    spec = spec_for("['lag']['nabla']['embed']", (128256, 2048), MESH3)
+    assert spec == P("model", ("pod", "data"))
+
+
+def test_dp_mode_replicates_weights_and_aligns_workers():
+    spec = spec_for("['params']['blocks']['0']['attn']['wq']",
+                    (16, 2048, 32, 64), MESH, mode="dp")
+    assert spec == P(None, None, None, None)
+    gh = spec_for("['lag']['grad_hat']['blocks']['0']['mlp']['w_up']",
+                  (16, 16, 2048, 8192), MESH, mode="dp")
+    assert gh[0] == "data" and gh[1] is None and "model" in gh
+
+
+def test_generic_fallback_biggest_dims():
+    spec = spec_for("['params']['something']", (4096, 1024), MESH)
+    assert spec == P("model", "data")
+
+
+def test_tiny_dims_never_sharded():
+    spec = spec_for("['params']['bias']", (8,), MESH)
+    assert spec == P(None)
+
+
+def test_batch_specs_tokens():
+    mesh = MESH
+    specs = batch_specs({"tokens": jax.ShapeDtypeStruct((256, 4096), jnp.int32),
+                         "pos": jax.ShapeDtypeStruct((), jnp.int32)}, mesh)
+    assert specs["tokens"] == P("data", "model")
+    assert specs["pos"] == P()
+
+
+def test_batch_specs_positions3():
+    specs = batch_specs(
+        {"positions3": jax.ShapeDtypeStruct((3, 256, 4096), jnp.int32)}, MESH)
+    assert specs["positions3"][1] == "data"
+    assert specs["positions3"][0] is None

@@ -1,0 +1,119 @@
+"""Distributed-LAG trainer: loss descent, counters, checkpoint round-trip."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import save, restore, latest_step
+from repro.configs import get_config
+from repro.data import TokenStream, make_heterogeneous_inputs, make_inputs
+from repro.dist import TrainerConfig, init_state, make_train_step, split_batch
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("llama3.2-1b").reduced()
+    stream = TokenStream(vocab=cfg.vocab_size, seed=0)
+    batch = make_heterogeneous_inputs(cfg, stream, 0, 4, 8, 64)
+    return cfg, batch
+
+
+def _run(cfg, batch, algo, steps=25, lr=0.05):
+    tcfg = TrainerConfig(algo=algo, num_workers=4, lr=lr)
+    state = init_state(jax.random.PRNGKey(0), cfg, tcfg)
+    step = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0,))
+    first = last = None
+    for _ in range(steps):
+        state, m = step(state, batch)
+        last = float(m["loss"])
+        first = first if first is not None else last
+    return state, first, last
+
+
+def test_gd_loss_decreases(setup):
+    cfg, batch = setup
+    state, first, last = _run(cfg, batch, "gd")
+    assert last < first
+    assert int(jax.device_get(state["lag"]["comm_total"])) == 25 * 4
+
+
+def test_lag_wk_matches_gd_when_triggering(setup):
+    cfg, batch = setup
+    _, _, last_gd = _run(cfg, batch, "gd", steps=10)
+    _, _, last_lag = _run(cfg, batch, "lag-wk", steps=10)
+    # early rounds all trigger (hist = 0), so trajectories start identical;
+    # by step 10 they may diverge slightly but must stay close
+    assert abs(last_lag - last_gd) / last_gd < 0.2
+
+
+def test_lag_wk_saves_uploads(setup):
+    cfg, batch = setup
+    state, first, last = _run(cfg, batch, "lag-wk", steps=30)
+    total = int(jax.device_get(state["lag"]["comm_total"]))
+    assert total < 30 * 4, "LAG-WK never skipped"
+    assert last < first
+
+
+def test_lag_ps_runs(setup):
+    cfg, batch = setup
+    state, first, last = _run(cfg, batch, "lag-ps", steps=10)
+    assert np.isfinite(last)
+    assert "theta_hat" in state["lag"]
+
+
+def test_lag_adam_runs_with_known_pathology(setup):
+    """lag-adam (beyond-paper) runs and saves uploads, but the trigger's
+    α-coupling is broken by Adam's preconditioning, so loss descent is NOT
+    asserted — see EXPERIMENTS.md §Repro 'LAG inside the deep trainer'."""
+    cfg, batch = setup
+    state, first, last = _run(cfg, batch, "lag-adam", steps=15, lr=3e-3)
+    assert np.isfinite(last)
+    total = int(jax.device_get(state[0]["lag"]["comm_total"])) \
+        if isinstance(state, tuple) else \
+        int(jax.device_get(state["lag"]["comm_total"]))
+    assert total < 15 * 4    # skips aggressively (the documented failure mode)
+
+
+def test_checkpoint_roundtrip(tmp_path, setup):
+    cfg, batch = setup
+    tcfg = TrainerConfig(algo="lag-wk", num_workers=4, lr=0.05)
+    state = init_state(jax.random.PRNGKey(0), cfg, tcfg)
+    step = jax.jit(make_train_step(cfg, tcfg))
+    state, _ = step(state, batch)
+    path = save(str(tmp_path), 1, state)
+    assert os.path.exists(path)
+    assert latest_step(str(tmp_path)) == 1
+    like = init_state(jax.random.PRNGKey(1), cfg, tcfg)
+    restored, step_no = restore(str(tmp_path), like)
+    assert step_no == 1
+    for a, b in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32))
+    # resumed trajectory identical to uninterrupted one
+    s1, _ = step(state, batch)
+    s2, _ = step(restored, batch)
+    np.testing.assert_allclose(
+        np.asarray(jax.tree_util.tree_leaves(s1["params"])[0], np.float32),
+        np.asarray(jax.tree_util.tree_leaves(s2["params"])[0], np.float32))
+
+
+def test_split_batch_positions3():
+    pos3 = jnp.arange(3 * 4 * 5).reshape(3, 4, 5)
+    out = split_batch({"positions3": pos3}, 2)["positions3"]
+    assert out.shape == (2, 3, 2, 5)
+    np.testing.assert_array_equal(out[0], pos3[:, :2])
+    np.testing.assert_array_equal(out[1], pos3[:, 2:])
+
+
+def test_data_pipeline_deterministic():
+    cfg = get_config("llama3.2-1b").reduced()
+    s1 = TokenStream(vocab=cfg.vocab_size, seed=7)
+    s2 = TokenStream(vocab=cfg.vocab_size, seed=7)
+    b1 = make_inputs(cfg, s1, 3, 4, 32)
+    b2 = make_inputs(cfg, s2, 3, 4, 32)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = make_inputs(cfg, s1, 4, 4, 32)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
