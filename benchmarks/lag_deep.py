@@ -1,9 +1,19 @@
 """LAG inside the deep-learning trainer (beyond the paper's convex tests):
 reduced llama3.2-1b, heterogeneous worker shards, full-batch regime.
 Validates that the distributed LAG trainer reduces uploads while matching
-GD's loss trajectory."""
+GD's loss trajectory.
+
+Run as a script to start the perf trajectory:
+
+  PYTHONPATH=src python -m benchmarks.lag_deep [--steps N] [--out PATH]
+
+writes ``BENCH_lag_deep.json`` (steps/sec per algorithm + uploads saved vs
+GD) so successive PRs can diff throughput and communication.
+"""
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -49,3 +59,42 @@ def lag_trainer_bench(steps: int = 50, workers: int = 8):
 
 
 ALL_BENCHES = [lag_trainer_bench]
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--steps", type=int, default=50)
+    p.add_argument("--workers", type=int, default=8)
+    p.add_argument("--out", default="BENCH_lag_deep.json")
+    args = p.parse_args(argv)
+
+    rows, claims = lag_trainer_bench(steps=args.steps, workers=args.workers)
+    algos = {}
+    for r in rows:
+        algo = r["name"].split("/", 1)[1]
+        derived = dict(kv.split("=") for kv in r["derived"].split(";"))
+        algos[algo] = {
+            "us_per_call": r["us_per_call"],
+            "steps_per_sec": round(1e6 / r["us_per_call"], 3),
+            "loss": float(derived["loss"]),
+            "uploads": int(derived["uploads"]),
+        }
+    gd_uploads = algos["gd"]["uploads"]
+    rec = {
+        "bench": "lag_deep",
+        "steps": args.steps,
+        "workers": args.workers,
+        "algos": algos,
+        "uploads_saved_vs_gd": {
+            a: gd_uploads - algos[a]["uploads"] for a in algos if a != "gd"},
+        "claims": [{"name": n, "ok": bool(ok), "detail": d}
+                   for n, ok, d in claims],
+    }
+    with open(args.out, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(json.dumps(rec, indent=1))
+    return 0 if all(c["ok"] for c in rec["claims"]) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -23,7 +23,7 @@ import json
 import jax
 
 from repro.launch import dryrun as dr
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, mesh_context
 
 
 def main():
@@ -64,14 +64,15 @@ def main():
 
     import time
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         fn, arg_shapes, in_sh, out_sh = dr.build_lowerable(
             cfg, args.shape, mesh, workers,
             seq_shard=not args.no_input_seq_shard, mode=args.mode)
         compiled = jax.jit(fn, in_shardings=in_sh,
                            out_shardings=out_sh).lower(*arg_shapes).compile()
     from repro.dist.hlo_analysis import collective_bytes
-    coll = collective_bytes(compiled.as_text(), pod_size=dr.POD_SIZE)
+    coll = collective_bytes(compiled.as_text(), pod_size=dr.POD_SIZE,
+                            n_devices=int(mesh.devices.size))
     cost = compiled.cost_analysis() or {}
     mem = compiled.memory_analysis()
     out = {

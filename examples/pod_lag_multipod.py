@@ -19,7 +19,7 @@ from repro.configs import get_config
 from repro.data import TokenStream, make_heterogeneous_inputs
 from repro.dist import pod_lag
 from repro.dist.lag_trainer import TrainerConfig
-from repro.launch.mesh import _auto
+from repro.launch.mesh import make_mesh, mesh_context
 
 
 def main():
@@ -28,8 +28,7 @@ def main():
     p.add_argument("--lr", type=float, default=0.05)
     args = p.parse_args()
 
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=_auto(3))
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
     cfg = get_config("llama3.2-1b").reduced()
     tcfg = TrainerConfig(algo="lag-wk", num_workers=2, lr=args.lr)
     state = pod_lag.init_state(jax.random.PRNGKey(0), cfg, tcfg, n_pods=2)
@@ -40,7 +39,7 @@ def main():
 
     grad_bytes = sum(x.size * 4 for x in jax.tree_util.tree_leaves(
         state["params"]))
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         for step in range(args.steps):
             state, m = step_fn(state, batch)
             if step % 10 == 0 or step == args.steps - 1:

@@ -5,6 +5,10 @@
 Reproduces the headline result: LAG-WK matches batch GD's iteration count
 while cutting worker→server uploads by an order of magnitude when the
 workers' smoothness constants are heterogeneous (paper Fig. 3 / Table 5).
+
+Next step: the same algorithm inside a real sharded deep trainer —
+``examples/train_lag_llm.py`` (and ``examples/pod_lag_multipod.py`` for
+the pod-level variant that skips the cross-pod collective).
 """
 import jax
 jax.config.update("jax_enable_x64", True)

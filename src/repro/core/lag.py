@@ -5,12 +5,14 @@ This module implements the paper's update (eq. 4) and both trigger rules
 per-worker* functions over arbitrary gradient pytrees.  Two drivers reuse
 them:
 
-* ``repro.core.simulate`` — the parameter-server simulation used for the
-  paper's convex experiments (workers as a stacked leading axis, vmapped).
-* ``repro.dist.lag_trainer`` — the shard_map distributed trainer where a
-  "worker" is a data-mesh axis group and the server is virtual
-  (all-reduce data parallelism), plus the pod-level variant where the
-  cross-pod collective is *actually skipped* via ``lax.cond``.
+* ``repro.core.simulate.run`` — the parameter-server simulation used for
+  the paper's convex experiments (workers as a stacked leading axis,
+  vmapped).
+* ``repro.dist.lag_trainer.make_train_step`` — the distributed deep
+  trainer where a "worker" is a batch shard (vmapped gradients, GSPMD
+  placement via ``repro.dist.sharding.tree_shardings``), and
+  ``repro.dist.pod_lag.make_pod_lag_step`` — the pod-level variant where
+  the cross-pod collective is *actually skipped* via ``lax.cond``.
 
 Everything is functional: state in, state out, jit/scan friendly.
 """
@@ -121,6 +123,14 @@ def wk_communicate(grad_new: Pytree, grad_hat: Pytree,
 
     ``sqnorm_fn`` is injectable so the distributed trainer can supply a
     model-axis-psum'd (or Pallas-fused) squared-norm.
+
+    Float32 caveat: at *exact* convergence hist underflows to 0 (RHS = 0)
+    while stale ĝ_m residues keep the LHS at the noise floor, so workers
+    can keep firing numerically meaningless uploads.  This is harmless to
+    the iterates (the deltas are round-off-sized) and unavoidable without
+    breaking the ξ = 0 ⇒ LAG ≡ GD equivalence, which *requires* firing on
+    arbitrarily small changes; measure upload savings over the descent
+    phase (paper Fig. 3 reports exactly that regime).
     """
     lhs = sqnorm_fn(tree_sub(grad_new, grad_hat))
     return lhs > trigger_rhs(hist, cfg)

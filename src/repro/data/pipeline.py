@@ -80,7 +80,8 @@ def make_heterogeneous_inputs(cfg: ModelConfig, stream: TokenStream,
                               noise_lo: float = 0.01, noise_hi: float = 0.4
                               ) -> dict:
     """Global batch whose worker shards (rows m·B/W:(m+1)·B/W, matching
-    ``repro.dist.split_batch``) have *heterogeneous predictability* —
+    ``repro.dist.lag_trainer.split_batch``) have *heterogeneous
+    predictability* —
     worker m's stream has noise level interpolating noise_lo→noise_hi.
     More-predictable shards ⇒ flatter per-worker loss ⇒ smaller effective
     L_m — the heterogeneity LAG exploits (paper Lemma 4).  ``fixed=True``

@@ -1,0 +1,205 @@
+"""Collective-traffic accounting from compiled HLO text.
+
+LAQ (Sun et al., 2019) argues communication savings must be measured in
+*bytes on the wire*, not upload counts.  This module parses the optimized
+HLO of a compiled program and charges every collective op its ring-algorithm
+wire bytes, so the dry-run and §Perf harnesses can report how many bytes a
+step actually moves — and, with ``pod_size``, how many of them cross the
+pod boundary (the expensive DCI link pod-LAG exists to avoid).
+
+Cost model (per participating device, ring algorithms, group size n):
+
+  all-reduce           2·B·(n−1)/n      (reduce-scatter + all-gather phases)
+  all-gather           B·(n−1)/n        (B = full gathered output bytes)
+  reduce-scatter       B·(n−1)          (B = scattered output bytes;
+                                         full input is B·n)
+  all-to-all           B·(n−1)/n
+  collective-permute   B                (each device forwards its buffer)
+
+``all-reduce-start`` / ``all-reduce-done`` pairs (async collectives) are
+counted once, on the ``-start`` op.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional
+
+# dtype → bytes per element (HLO shorthand names)
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3": 1, "f8e5m2": 1, "f8e4m3fn": 1, "f8e5m2fnuz": 1,
+    "f8e4m3fnuz": 1, "f8e4m3b11fnuz": 1,
+    "s8": 1, "u8": 1, "pred": 1,
+    "s4": 0.5, "u4": 0.5,
+}
+
+_SHAPE_RE = re.compile(r"([a-z]\w*)\[([\d,]*)\]")
+
+# `%name = <shape> <op-kind>(` — shape is a tuple or dtype[dims]{layout};
+# the op kind is the identifier right before the open paren.
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z]\w*\[[\d,]*\](?:\{[^}]*\})?)\s+([a-z0-9-]+)\(")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "collective-broadcast")
+
+_GROUPS_RE = re.compile(r"replica_groups=(\{\{[\d,{}\s]*\}\}|\[[\d,]+\]<=\[[\d,]+\](?:T\([\d,]+\))?)")
+
+
+def _shape_bytes(shape: str) -> float:
+    """Total bytes of an HLO shape string, e.g. ``f32[128,4]`` or a tuple
+    ``(f32[4], bf16[2])``.  Layout suffixes (``{1,0}``) are ignored."""
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(shape):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _parse_replica_groups(text: str) -> List[List[int]]:
+    """Parse ``{{0,1},{2,3}}`` or iota ``[2,2]<=[4]`` replica group syntax."""
+    if text.startswith("{"):
+        groups = []
+        for grp in re.findall(r"\{([\d,\s]+)\}", text):
+            members = [int(x) for x in grp.replace(" ", "").split(",") if x]
+            if members:
+                groups.append(members)
+        return groups
+    # iota form: [G,n]<=[dims...] optionally T(perm) — device ids are
+    # iota(prod dims) reshaped to dims, transposed by perm, then flattened
+    # and regrouped into G groups of n
+    m = re.match(r"\[([\d,]+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?", text)
+    if not m:
+        return []
+    import numpy as np
+    out_dims = [int(x) for x in m.group(1).split(",")]
+    src_dims = [int(x) for x in m.group(2).split(",")]
+    ids = np.arange(math.prod(src_dims)).reshape(src_dims)
+    if m.group(3):
+        ids = ids.transpose([int(x) for x in m.group(3).split(",")])
+    ids = ids.reshape(-1).tolist()
+    n_groups, group_size = out_dims[0], math.prod(out_dims[1:])
+    return [ids[g * group_size:(g + 1) * group_size] for g in range(n_groups)]
+
+
+def _wire_bytes(kind: str, nbytes: float, n: int) -> float:
+    """Ring-algorithm bytes moved per participating device.  ``n == 0``
+    means an unknown global group: use the asymptotic (n−1)/n → 1 factor
+    (reduce-scatter, whose exact cost grows with n, is charged its output
+    bytes once — a lower bound)."""
+    if n == 1:
+        return 0.0
+    frac = 1.0 if n == 0 else (n - 1) / n
+    if kind == "all-reduce":
+        return 2.0 * nbytes * frac
+    if kind == "all-gather":
+        return nbytes * frac
+    if kind == "reduce-scatter":
+        return nbytes * (n - 1) if n else nbytes
+    if kind == "all-to-all":
+        return nbytes * frac
+    if kind == "collective-permute":
+        return nbytes
+    return nbytes
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    """Aggregated wire traffic of one compiled program."""
+    ops: List[dict] = dataclasses.field(default_factory=list)
+    by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+    by_kind_count: Dict[str, int] = dataclasses.field(default_factory=dict)
+    total_bytes: float = 0.0
+    cross_pod_bytes: float = 0.0
+
+    def add(self, op: dict):
+        self.ops.append(op)
+        k = op["kind"]
+        self.by_kind[k] = self.by_kind.get(k, 0.0) + op["wire_bytes"]
+        self.by_kind_count[k] = self.by_kind_count.get(k, 0) + 1
+        self.total_bytes += op["wire_bytes"]
+        if op["cross_pod"]:
+            self.cross_pod_bytes += op["wire_bytes"]
+
+    def as_dict(self) -> dict:
+        return {
+            "total_bytes": self.total_bytes,
+            "cross_pod_bytes": self.cross_pod_bytes,
+            "by_kind_bytes": dict(self.by_kind),
+            "by_kind_count": dict(self.by_kind_count),
+            "n_ops": len(self.ops),
+        }
+
+
+def _crosses_pod(groups: List[List[int]], pod_size: Optional[int]) -> bool:
+    if not pod_size:
+        return False
+    return any(len({m // pod_size for m in grp}) > 1 for grp in groups)
+
+
+def collective_bytes(hlo: str, pod_size: Optional[int] = None,
+                     n_devices: Optional[int] = None) -> CollectiveStats:
+    """Scan optimized HLO text and total per-collective wire bytes.
+
+    ``pod_size``: devices per pod; a collective whose replica group spans
+    ids from different pods is charged to ``cross_pod_bytes`` as well.
+    ``n_devices``: total device count — used for collectives with empty or
+    absent ``replica_groups`` (HLO's spelling for "all devices in one
+    group").  Without it those ops are charged the asymptotic ring factor
+    ((n−1)/n → 1) and, if ``pod_size`` is set, cannot be classified
+    cross-pod.
+    """
+    st = CollectiveStats()
+    for line in hlo.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shape, kind = m.group(1), m.group(2)
+        if kind.endswith("-done"):
+            continue  # async pair: counted on the -start op
+        if kind.endswith("-start"):
+            kind = kind[:-6]
+            if shape.startswith("("):
+                # async tuple shape is (operand…, result): the wire payload
+                # is the result buffer (the largest element — for
+                # all-gather the output strictly dominates the input),
+                # not the whole tuple
+                elems = [f"{d}[{dims}]"
+                         for d, dims in _SHAPE_RE.findall(shape)]
+                if elems:
+                    shape = max(elems, key=_shape_bytes)
+        if kind not in _COLLECTIVES:
+            continue
+        nbytes = _shape_bytes(shape)
+        gm = _GROUPS_RE.search(line)
+        groups = _parse_replica_groups(gm.group(1)) if gm else []
+        if not groups and n_devices and kind != "collective-permute":
+            groups = [list(range(n_devices))]   # flat/global replica group
+        if groups:
+            n = max(len(g) for g in groups)
+        elif kind == "collective-permute":
+            # permute has source_target_pairs, not replica groups
+            n = 2
+        else:
+            n = 0   # unknown global group: asymptotic ring factor
+        wire = _wire_bytes(kind, nbytes, n)
+        cross = _crosses_pod(groups, pod_size)
+        if kind == "collective-permute" and pod_size and not groups:
+            pairs = re.search(r"source_target_pairs=\{([\d,{}\s]*)\}", line)
+            if pairs:
+                pp = re.findall(r"\{(\d+),(\d+)\}", pairs.group(1))
+                cross = any(int(a) // pod_size != int(b) // pod_size
+                            for a, b in pp)
+        st.add({"kind": kind, "shape": shape, "bytes": nbytes,
+                "group_size": n, "wire_bytes": wire, "cross_pod": cross,
+                "line": line.strip()[:160]})
+    return st

@@ -1,0 +1,282 @@
+"""Distributed LAG trainer: the paper's lazy aggregation inside a real
+deep-learning training step.
+
+A "worker" here is a slice of the global batch (rows ``m·B/W:(m+1)·B/W``,
+the layout ``repro.data.make_heterogeneous_inputs`` produces).  Every step
+computes all W per-worker gradients in one vmapped backward pass, runs the
+per-worker LAG trigger from ``repro.core.lag``, and applies the server
+recursion (eq. 4): only triggered workers contribute their gradient
+*change* δ∇ to the aggregate ∇^k.  Algorithm choice is one config switch
+(LASG-style pluggability — Chen et al., 2020):
+
+  gd        every worker uploads every round (synchronous baseline)
+  lag-wk    LAG with the worker-side trigger (15a) + SGD server step
+  lag-ps    LAG with the server-side trigger (15b) + SGD server step
+  adam      every-round uploads, Adam server step (beyond-paper baseline)
+  lag-adam  LAG-WK trigger + Adam server step (beyond-paper; known trigger
+            pathology under preconditioning — see EXPERIMENTS.md)
+
+State is a flat dict pytree (checkpoint- and donation-friendly) with the
+LAG group under ``state["lag"]``:
+
+  grad_hat        (W, *param) per-worker ∇L_m(θ̂_m) — leading worker dim
+  nabla           aggregate ∇^k = Σ_m grad_hat_m
+  hist            (D,) iterate-lag ring buffer ‖θ^{k+1-d} − θ^{k-d}‖²
+  comm_total      scalar upload counter (gd uploads = steps × W)
+  comm_per_worker (W,) per-worker upload counts
+  theta_hat, L_m  lag-ps only: per-worker iterate copies + smoothness
+
+Sharding is applied OUTSIDE via ``repro.dist.sharding.tree_shardings`` —
+the step function itself is placement-free and jit/donate-friendly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lag
+from repro.models import model
+from repro.models.common import ModelConfig
+from repro.optim import optimizers
+
+Pytree = Any
+
+ALGOS = ("gd", "lag-wk", "lag-ps", "adam", "lag-adam")
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainerConfig:
+    """Distributed-trainer hyper-parameters (paper notation in brackets).
+
+    ``lr`` is the stepsize on the MEAN aggregated gradient: the server
+    update is θ^{k+1} = θ^k − (lr/M)·∇^k with ∇^k = Σ_m ∇L_m, i.e. the
+    paper's eq. (4) with α = lr/M, so tuning lr is worker-count-independent
+    (the data-parallel convention).  The triggers are exactly (15a)/(15b)
+    with that same α, which makes the skip condition ≈ L_m ≤ √(ξD)/lr —
+    smooth (low-noise) workers skip, rough ones upload (paper Lemma 4).
+    """
+    algo: str = "lag-wk"
+    num_workers: int = 4
+    lr: float = 0.05
+    D: int = 10                     # iterate-lag window [D]
+    xi: float = 0.1                 # trigger weight [ξ]; paper 1/D
+    grad_hat_dtype: Optional[str] = None   # e.g. "bfloat16" to halve HBM
+    momentum: float = 0.0           # SGD momentum for gd/lag-wk/lag-ps
+    adam_b1: float = 0.9
+    adam_b2: float = 0.999
+
+    def __post_init__(self):
+        if self.algo not in ALGOS:
+            raise ValueError(f"unknown algo {self.algo!r}; known: {ALGOS}")
+
+    @property
+    def uses_adam(self) -> bool:
+        return self.algo in ("adam", "lag-adam")
+
+    @property
+    def lag_rule(self) -> str:
+        return "ps" if self.algo == "lag-ps" else "wk"
+
+    def lag_config(self, num_units: Optional[int] = None) -> lag.LAGConfig:
+        # α = lr/M: eq. (4) with the aggregate normalized by worker count —
+        # server_update and trigger_rhs both read this α, so the update and
+        # the trigger stay mutually consistent (see class docstring)
+        m = num_units or self.num_workers
+        return lag.LAGConfig(num_workers=m, alpha=self.lr / m, D=self.D,
+                             xi=self.xi, rule=self.lag_rule)
+
+    def replace(self, **kw) -> "TrainerConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Batch splitting
+# ---------------------------------------------------------------------------
+
+def split_batch(batch: Dict[str, jnp.ndarray], num_workers: int) -> Dict:
+    """Reshape every leaf's batch dim into a leading worker dim.
+
+    ``(B, …) → (W, B/W, …)``; mRoPE ``positions3`` leaves carry a leading
+    3-axis, so their batch dim is axis 1 and the worker dim still lands in
+    front: ``(3, B, S) → (W, 3, B/W, S)``.  Scalars are broadcast to (W,).
+    """
+    W = num_workers
+
+    def one(path, x):
+        key = jax.tree_util.keystr(path)
+        if x.ndim == 0:
+            return jnp.broadcast_to(x, (W,))
+        b_ax = 1 if "positions3" in key else 0
+        B = x.shape[b_ax]
+        if B % W:
+            raise ValueError(f"batch dim {B} not divisible by {W} workers"
+                             f" at {key}")
+        shp = x.shape[:b_ax] + (W, B // W) + x.shape[b_ax + 1:]
+        return jnp.moveaxis(x.reshape(shp), b_ax, 0)
+
+    return jax.tree_util.tree_map_with_path(one, batch)
+
+
+# ---------------------------------------------------------------------------
+# State
+# ---------------------------------------------------------------------------
+
+def init_state(key, cfg: ModelConfig, tcfg: TrainerConfig) -> Dict:
+    """Fresh trainer state.  ``grad_hat`` starts at zero with an empty
+    history, so round 0 triggers every worker (lhs ‖∇L_m‖² > rhs 0) and
+    delivers the exact first GD step — the paper's all-upload init."""
+    W = tcfg.num_workers
+    params = model.init(key, cfg)
+    gh_dtype = jnp.dtype(tcfg.grad_hat_dtype) if tcfg.grad_hat_dtype \
+        else None
+
+    def stacked_zeros(p):
+        return jnp.zeros((W,) + p.shape, gh_dtype or p.dtype)
+
+    lag_state = {
+        "grad_hat": jax.tree_util.tree_map(stacked_zeros, params),
+        "nabla": jax.tree_util.tree_map(jnp.zeros_like, params),
+        "hist": lag.hist_init(tcfg.D),
+        "comm_total": jnp.zeros((), jnp.int32),
+        "comm_per_worker": jnp.zeros((W,), jnp.int32),
+    }
+    if tcfg.algo == "lag-ps":
+        # per-worker iterate copies θ̂_m plus a smoothness estimate; with no
+        # oracle L_m for a deep net we use the 1/α heuristic (paper: α=1/L)
+        lag_state["theta_hat"] = jax.tree_util.tree_map(
+            lambda p: jnp.zeros((W,) + p.shape, p.dtype), params)
+        lag_state["L_m"] = jnp.full((W,), 1.0 / tcfg.lr, jnp.float32)
+
+    state = {"params": params, "lag": lag_state,
+             "step": jnp.zeros((), jnp.int32)}
+    if tcfg.uses_adam:
+        opt = optimizers.adam(tcfg.lr, b1=tcfg.adam_b1, b2=tcfg.adam_b2)
+        state["opt"] = opt.init(params)
+    elif tcfg.momentum:
+        state["opt"] = optimizers.sgd(tcfg.lr, tcfg.momentum).init(params)
+    return state
+
+
+# ---------------------------------------------------------------------------
+# Shared LAG-step pieces (also used by repro.dist.pod_lag)
+# ---------------------------------------------------------------------------
+
+def masked_delta_tree(comm: jnp.ndarray, grads: Pytree,
+                      grad_hat: Pytree) -> Pytree:
+    """mask_m · (∇L_m(θ^k) − ĝ_m): the per-unit uploads δ∇ of eq. (4),
+    stacked on the leading worker/pod dim."""
+    def one(g, gh):
+        mask = comm.astype(g.dtype).reshape(
+            comm.shape[:1] + (1,) * (g.ndim - 1))
+        return mask * (g - gh.astype(g.dtype))
+    return jax.tree_util.tree_map(one, grads, grad_hat)
+
+
+def apply_delta(grad_hat: Pytree, delta: Pytree) -> Pytree:
+    """ĝ_m ← ĝ_m + δ∇_m (== ∇L_m(θ^k) exactly for communicating units)."""
+    return jax.tree_util.tree_map(lambda gh, d: gh + d.astype(gh.dtype),
+                                  grad_hat, delta)
+
+
+def comm_counter_updates(lag_state: Dict, comm: jnp.ndarray
+                         ) -> Tuple[jnp.ndarray, Dict]:
+    """(int mask, {comm_total, comm_per_worker} updates) for this round."""
+    comm_i = comm.astype(jnp.int32)
+    return comm_i, {
+        "comm_total": lag_state["comm_total"] + jnp.sum(comm_i),
+        "comm_per_worker": lag_state["comm_per_worker"] + comm_i,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+def _worker_mask(tcfg: TrainerConfig, lagcfg: lag.LAGConfig, params: Pytree,
+                 grads: Pytree, lag_state: Dict) -> jnp.ndarray:
+    """(W,) bool — which workers upload this round."""
+    W = tcfg.num_workers
+    hist = lag_state["hist"]
+    if tcfg.algo in ("gd", "adam"):
+        return jnp.ones((W,), bool)
+    if tcfg.algo == "lag-ps":
+        return jax.vmap(
+            lambda th, lm: lag.ps_communicate(params, th, lm, hist, lagcfg),
+            in_axes=(0, 0))(lag_state["theta_hat"], lag_state["L_m"])
+    return jax.vmap(
+        lambda g, gh: lag.wk_communicate(g, gh, hist, lagcfg),
+        in_axes=(0, 0))(grads, lag_state["grad_hat"])
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainerConfig):
+    """Build the jit/donate-friendly ``(state, batch) → (state, metrics)``."""
+    W = tcfg.num_workers
+    lagcfg = tcfg.lag_config()
+    opt = None
+    if tcfg.uses_adam:
+        opt = optimizers.adam(tcfg.lr, b1=tcfg.adam_b1, b2=tcfg.adam_b2)
+    elif tcfg.momentum:
+        opt = optimizers.sgd(tcfg.lr, tcfg.momentum)
+
+    def train_step(state: Dict, batch: Dict) -> Tuple[Dict, Dict]:
+        params, lag_state = state["params"], state["lag"]
+        shards = split_batch(batch, W)
+
+        losses, grads = jax.vmap(
+            lambda b: jax.value_and_grad(
+                lambda p: model.loss_fn(p, cfg, b))(params))(shards)
+        loss = jnp.mean(losses)
+
+        comm = _worker_mask(tcfg, lagcfg, params, grads, lag_state)
+        delta = masked_delta_tree(comm, grads, lag_state["grad_hat"])
+        sum_delta = jax.tree_util.tree_map(lambda d: jnp.sum(d, axis=0),
+                                           delta)
+        new_grad_hat = apply_delta(lag_state["grad_hat"], delta)
+
+        if opt is None:
+            # paper server update (eq. 4): θ ← θ − α(∇^{k-1} + Σ δ∇)
+            new_params, new_nabla, new_hist = lag.server_update(
+                params, lag_state["nabla"], sum_delta, lag_state["hist"],
+                lagcfg)
+            new_opt = None
+        else:
+            new_nabla = lag.tree_add(lag_state["nabla"], sum_delta)
+            # the optimizer sees the mean aggregate (same normalization as
+            # the SGD path's α = lr/M)
+            new_params, new_opt = opt.update(
+                lag.tree_scale(new_nabla, 1.0 / W), state["opt"],
+                params, state["step"])
+            new_hist = lag.hist_push(
+                lag_state["hist"],
+                lag.tree_sqnorm(lag.tree_sub(new_params, params)))
+
+        comm_i, counters = comm_counter_updates(lag_state, comm)
+        new_lag = dict(lag_state,
+                       grad_hat=new_grad_hat,
+                       nabla=new_nabla,
+                       hist=new_hist,
+                       **counters)
+        if tcfg.algo == "lag-ps":
+            new_lag["theta_hat"] = jax.tree_util.tree_map(
+                lambda th, p: jnp.where(
+                    comm.reshape((W,) + (1,) * p.ndim),
+                    p[None].astype(th.dtype), th),
+                lag_state["theta_hat"], params)
+
+        new_state = dict(state, params=new_params, lag=new_lag,
+                         step=state["step"] + 1)
+        if new_opt is not None:
+            new_state["opt"] = new_opt
+
+        metrics = {
+            "loss": loss,
+            "comm_this_round": jnp.sum(comm_i),
+            "comm_total": new_lag["comm_total"],
+            "trigger_rhs": lag.trigger_rhs(lag_state["hist"], lagcfg),
+        }
+        return new_state, metrics
+
+    return train_step

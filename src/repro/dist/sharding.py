@@ -1,0 +1,289 @@
+"""Rule-based sharding: parameter path + shape → PartitionSpec.
+
+Models in this repo are annotation-free pytrees (see ``repro.models.common``);
+placement is decided HERE, from the leaf's path string (as produced by
+``jax.tree_util.keystr``) and shape.  One function — ``spec_for`` — encodes
+the layout policy for every state group:
+
+* **params** — explicit rules per leaf kind (attention heads, MoE experts,
+  embedding vocab, MLP ffn) shard the *non-contracting* dim over the
+  ``"model"`` axis; contracting dims stay unsharded (data-sharded
+  contracting dims emit activation partial-sum reduces — §Perf iteration 4).
+  Leaves a rule cannot divide fall back replicated (e.g. mamba2's 50280
+  vocab on a 16-way axis), except the generic rule below.
+* **memory gate** — any parameter still >2 GiB/device (bf16 estimate) after
+  model-sharding gets the data axes on its largest remaining divisible dim:
+  at 235B scale HBM capacity trumps the partial-sum cost.
+* **lag state** — ``state['lag']`` leaves (``grad_hat``/``theta_hat`` with
+  their leading worker dim, and the aggregate ``nabla``) are never
+  contracted, so after the worker dim is protected they additionally take
+  the data axes on their largest free dim (2-D sharding).
+* **kv caches** — batch over data, sequence over model (sequence-parallel
+  decode; a batch-1 long-context cache keeps batch replicated).
+* **dp mode** — pure data parallelism: weights replicated, the LAG worker
+  dim rides the data axis so worker shards live where their data lives.
+
+``tree_specs`` / ``tree_shardings`` map a whole state pytree;
+``batch_specs`` / ``batch_shardings`` place input batches (batch dim over
+the flattened data axes, sequence over model when requested).
+
+The mesh argument is duck-typed: anything with ``axis_names`` and a
+``shape`` mapping works (tests use a FakeMesh; no devices required).
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+Pytree = Any
+
+_KEY_RE = re.compile(r"\[['\"]?([^'\"\]]+)['\"]?\]")
+
+# memory gate: per-device bytes above which a second (data) axis is added.
+# Production runs bf16 params, so the estimate charges 2 bytes/element.
+GATE_BYTES = 2 * 2 ** 30
+GATE_BYTES_PER_EL = 2
+
+
+def _keys(path: str) -> list:
+    """``"['params']['blocks']['0']['attn']['wq']"`` → list of key strings."""
+    return _KEY_RE.findall(path)
+
+
+def _model_size(mesh) -> int:
+    return int(dict(mesh.shape).get("model", 1))
+
+
+def _data_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def _data_size(mesh) -> int:
+    shp = dict(mesh.shape)
+    return int(math.prod(shp[a] for a in _data_axes(mesh)) or 1)
+
+
+def _data_entry(mesh):
+    """The spec entry for "all data axes": a bare name for a single axis,
+    the flattened tuple (e.g. ``("pod", "data")``) on multi-pod meshes."""
+    axes = _data_axes(mesh)
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else axes
+
+
+def _div(dim: int, n: int) -> bool:
+    return n > 1 and dim > 0 and dim % n == 0
+
+
+def _with(spec: list, idx: int, entry) -> list:
+    out = list(spec)
+    out[idx] = entry
+    return out
+
+
+def _densify(spec: list, shape: Sequence[int], mesh,
+             skip: Tuple[int, ...] = ()) -> list:
+    """Add the data axes to the largest unsharded divisible dim (used for
+    LAG state and the memory gate — leaves that are never contracted)."""
+    n = _data_size(mesh)
+    entry = _data_entry(mesh)
+    if entry is None or any(s is not None and s != "model" for s in spec):
+        return spec                       # data axes already in use
+    cands = [(shape[i], i) for i in range(len(shape))
+             if spec[i] is None and i not in skip and _div(shape[i], n)]
+    if not cands:
+        return spec
+    _, idx = max(cands)
+    return _with(spec, idx, entry)
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules
+# ---------------------------------------------------------------------------
+
+def _param_spec(keys: Sequence[str], shape: Sequence[int], mesh,
+                mode: str = "tp", gate: bool = True) -> list:
+    """Spec (as a list of entries) for a model-parameter-like leaf."""
+    nd = len(shape)
+    spec = [None] * nd
+    if mode == "dp":                      # pure data parallel: replicate
+        return spec
+    if nd <= 1:                           # scalars / biases / norm scales
+        return spec
+    m = _model_size(mesh)
+    last = keys[-1] if keys else ""
+    parent = keys[-2] if len(keys) >= 2 else ""
+
+    if last in ("embed", "mask_emb"):
+        # (vocab, d): vocab over model when divisible; d is the contracting
+        # dim of both the lookup and the tied head — never sharded here
+        if _div(shape[-2], m):
+            spec = _with(spec, nd - 2, "model")
+    elif last == "head":
+        # (d, vocab): output vocab over model; d contracting
+        if _div(shape[-1], m):
+            spec = _with(spec, nd - 1, "model")
+    elif parent == "attn" or last in ("wq", "wk", "wv", "wo",
+                                      "bq", "bk", "bv"):
+        # wq/wk/wv (…, d, H, hd): heads at −2;  wo (…, H, hd, d): heads at −3
+        h = nd - 3 if last == "wo" else nd - 2
+        if 0 <= h < nd and _div(shape[h], m):
+            spec = _with(spec, h, "model")
+    elif parent == "moe":
+        if last == "router":              # (…, d, E): experts over model
+            if _div(shape[-1], m):
+                spec = _with(spec, nd - 1, "model")
+        elif nd >= 3:                     # (…, E, din, dout): expert parallel
+            e = nd - 3
+            if _div(shape[e], m):
+                spec = _with(spec, e, "model")
+    elif parent == "mlp" or last in ("w_up", "w_gate", "w_down"):
+        # ffn dim over model: last dim for up/gate, −2 for down (row-parallel)
+        f = nd - 2 if last == "w_down" else nd - 1
+        if _div(shape[f], m):
+            spec = _with(spec, f, "model")
+    elif last in ("k", "v") and nd >= 4:
+        # KV cache (…, B, S, kv_heads, hd): batch over data, seq over model
+        b, s = nd - 4, nd - 3
+        if _div(shape[b], _data_size(mesh)):
+            spec = _with(spec, b, _data_entry(mesh))
+        if _div(shape[s], m):
+            spec = _with(spec, s, "model")
+        return spec                       # caches never take the gate
+    else:
+        # generic fallback: biggest divisible dim over model, next over data
+        order = sorted(range(nd), key=lambda i: -shape[i])
+        for i in order:
+            if _div(shape[i], m):
+                spec = _with(spec, i, "model")
+                break
+        for i in order:
+            if spec[i] is None and _div(shape[i], _data_size(mesh)):
+                spec = _with(spec, i, _data_entry(mesh))
+                break
+        return spec
+
+    if gate:
+        spec = _memory_gate(spec, shape, mesh)
+    return spec
+
+
+def _memory_gate(spec: list, shape: Sequence[int], mesh) -> list:
+    """>2 GiB/device after model-sharding ⇒ add the data axes too."""
+    if any(s is not None and s != "model" for s in spec):
+        return spec                       # data axes already in use
+    sharded = math.prod(_axis_size(mesh, s) for s in spec if s is not None)
+    per_dev = math.prod(shape) / max(sharded, 1) * GATE_BYTES_PER_EL
+    if per_dev <= GATE_BYTES:
+        return spec
+    return _densify(spec, shape, mesh)
+
+
+def _axis_size(mesh, entry) -> int:
+    shp = dict(mesh.shape)
+    if isinstance(entry, tuple):
+        return int(math.prod(shp[a] for a in entry))
+    return int(shp.get(entry, 1))
+
+
+# ---------------------------------------------------------------------------
+# LAG state rules
+# ---------------------------------------------------------------------------
+
+def _lag_spec(keys: Sequence[str], shape: Sequence[int], mesh,
+              mode: str) -> list:
+    kind = keys[1] if len(keys) > 1 else ""
+    if kind in ("grad_hat", "theta_hat"):
+        # leading worker dim is the lazy-aggregation unit — PROTECTED from
+        # model/data sharding in tp mode; in dp mode it rides the data axes
+        # (worker shards colocated with their data shards)
+        sub = keys[2:] or keys[1:]
+        base = _param_spec(sub, shape[1:], mesh, mode="tp", gate=False)
+        if mode == "dp":
+            entry = _data_entry(mesh)
+            w = entry if entry is not None and \
+                _div(shape[0], _data_size(mesh)) else None
+            return [w] + base
+        return [None] + _densify(base, shape[1:], mesh)
+    if kind == "nabla":
+        if mode == "dp":
+            return [None] * len(shape)    # aggregate is replicated under dp
+        base = _param_spec(keys[2:] or keys[1:], shape, mesh, mode="tp",
+                           gate=False)
+        return _densify(base, shape, mesh)
+    # hist / comm counters / L_m / rounds_skipped: tiny, replicated
+    return [None] * len(shape)
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+def spec_for(path: str, shape: Sequence[int], mesh, mode: str = "tp") -> P:
+    """PartitionSpec for one state leaf.
+
+    ``path`` is a ``jax.tree_util.keystr``-style path (``"['params']…"``),
+    ``mode`` is ``"tp"`` (tensor/model parallel rules, the default) or
+    ``"dp"`` (replicated weights, worker dim on the data axes).
+    """
+    keys = _keys(path)
+    if keys and keys[0] == "lag":
+        return P(*_lag_spec(keys, shape, mesh, mode))
+    if keys and keys[0] == "opt":
+        # optimizer moments mirror the params they precondition
+        return P(*_param_spec(keys[2:] or keys[1:], shape, mesh, mode))
+    return P(*_param_spec(keys, shape, mesh, mode))
+
+
+def tree_specs(tree: Pytree, mesh, mode: str = "tp") -> Pytree:
+    """Map ``spec_for`` over a state pytree (arrays or ShapeDtypeStructs)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: spec_for(jax.tree_util.keystr(path), leaf.shape,
+                                    mesh, mode),
+        tree)
+
+
+def tree_shardings(tree: Pytree, mesh, mode: str = "tp") -> Pytree:
+    """Like ``tree_specs`` but returns NamedShardings (needs a real Mesh)."""
+    return jax.tree_util.tree_map(
+        lambda spec: jax.sharding.NamedSharding(mesh, spec),
+        tree_specs(tree, mesh, mode),
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_specs(batch: Dict[str, Any], mesh, seq_shard: bool = True,
+                mode: str = "tp") -> Pytree:
+    """Input-batch placement: batch dim over the (flattened) data axes,
+    sequence dim over model when ``seq_shard`` (tp mode only).  The leading
+    3 of mRoPE ``positions3`` is never a batch dim."""
+    m = _model_size(mesh)
+
+    def one(path, leaf):
+        key = _keys(jax.tree_util.keystr(path))[-1]
+        shape = leaf.shape
+        nd = len(shape)
+        if nd == 0:
+            return P()
+        spec = [None] * nd
+        b = 1 if key == "positions3" else 0
+        if b < nd and _div(shape[b], _data_size(mesh)):
+            spec = _with(spec, b, _data_entry(mesh))
+        s = b + 1
+        if seq_shard and mode == "tp" and s < nd and _div(shape[s], m):
+            spec = _with(spec, s, "model")
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, batch)
+
+
+def batch_shardings(batch: Dict[str, Any], mesh, seq_shard: bool = True,
+                    mode: str = "tp") -> Pytree:
+    return jax.tree_util.tree_map(
+        lambda spec: jax.sharding.NamedSharding(mesh, spec),
+        batch_specs(batch, mesh, seq_shard=seq_shard, mode=mode),
+        is_leaf=lambda x: isinstance(x, P))

@@ -20,7 +20,8 @@ from repro.configs import get_config
 from repro.data import TokenStream, make_inputs
 from repro.dist import (TrainerConfig, init_state, make_train_step,
                         tree_shardings, batch_shardings)
-from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.mesh import (make_host_mesh, make_production_mesh,
+                               mesh_context)
 
 
 def build_argparser():
@@ -64,7 +65,7 @@ def main(argv=None):
         print(f"resumed from step {start}")
 
     train_step = make_train_step(cfg, tcfg)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         state_sh = tree_shardings(state, mesh)
         state = jax.device_put(state, state_sh)
         step_fn = jax.jit(train_step, donate_argnums=(0,))

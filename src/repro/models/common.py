@@ -1,8 +1,9 @@
 """Shared model machinery: config, init helpers, norms, activations.
 
 Models are pure-JAX pytrees (nested dicts of jnp arrays).  Sharding is
-assigned *by parameter path* via ``repro.dist.sharding`` rules, so init
-functions here stay annotation-free.
+assigned *by parameter path* via ``repro.dist.sharding.spec_for`` (mapped
+over whole states by ``tree_specs``/``tree_shardings``), so init functions
+here stay annotation-free.
 """
 from __future__ import annotations
 

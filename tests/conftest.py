@@ -1,6 +1,22 @@
 import os
 import sys
 
+import pytest
+
 # Tests see the real device topology (1 CPU device) — the 512-device flag is
 # set ONLY inside repro.launch.dryrun / subprocess tests.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def pytest_addoption(parser):
+    parser.addoption("--run-slow", action="store_true", default=False,
+                     help="also run @pytest.mark.slow subprocess tests")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--run-slow"):
+        return
+    skip = pytest.mark.skip(reason="slow subprocess test; use --run-slow")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip)

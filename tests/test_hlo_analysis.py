@@ -59,6 +59,31 @@ def test_iota_replica_groups():
     assert st.cross_pod_bytes == 0.0
 
 
+def test_empty_replica_groups_uses_device_count():
+    # replica_groups={} means "all devices in one group"
+    hlo = """
+  %a = f32[1024]{0} all-reduce(%x), channel_id=1, replica_groups={}, to_apply=%add
+"""
+    st = collective_bytes(hlo, pod_size=2, n_devices=4)
+    assert abs(st.by_kind["all-reduce"] - 2 * 4096 * 3 / 4) < 1e-6
+    assert st.cross_pod_bytes == st.total_bytes      # 4 devices span 2 pods
+    # without n_devices: asymptotic ring factor, not silently zero
+    st2 = collective_bytes(hlo)
+    assert abs(st2.by_kind["all-reduce"] - 2 * 4096) < 1e-6
+
+
+def test_async_start_tuple_counts_result_only():
+    # -start tuple shape is (operand, result): charge the result buffer,
+    # not the tuple sum
+    hlo = """
+  %ags = (bf16[64,128]{1,0}, bf16[64,256]{1,0}) all-gather-start(%x), replica_groups={{0,1}}, dimensions={1}
+  %agd = bf16[64,256]{1,0} all-gather-done(%ags)
+"""
+    st = collective_bytes(hlo)
+    assert st.by_kind_count["all-gather"] == 1
+    assert abs(st.by_kind["all-gather"] - 64 * 256 * 2 * 0.5) < 1e-6
+
+
 def test_non_collectives_ignored():
     hlo = """
   %d = f32[8,8]{1,0} dot(%a, %b)

@@ -80,6 +80,74 @@ def test_server_update_is_gd_step_on_nabla():
 
 
 # ---------------------------------------------------------------------------
+# Edge cases: degenerate windows, pytree corner shapes, error paths
+# ---------------------------------------------------------------------------
+
+def test_hist_ring_buffer_D1():
+    """D=1: the window holds exactly the last step; every push evicts."""
+    h = lag.hist_init(1)
+    assert h.shape == (1,)
+    h = lag.hist_push(h, jnp.asarray(2.5))
+    np.testing.assert_allclose(h, [2.5])
+    h = lag.hist_push(h, jnp.asarray(7.0))
+    np.testing.assert_allclose(h, [7.0])
+    cfg = lag.LAGConfig(num_workers=2, alpha=0.5, D=1, xi=1.0)
+    np.testing.assert_allclose(lag.trigger_rhs(h, cfg), 7.0 / (0.25 * 4))
+
+
+def test_hist_push_most_recent_first():
+    """Ordering contract: index 0 is d=1 (newest), matching ξ_d weights."""
+    h = lag.hist_init(3)
+    for v in (1.0, 2.0, 3.0):
+        h = lag.hist_push(h, jnp.asarray(v))
+    np.testing.assert_allclose(h, [3.0, 2.0, 1.0])
+    # a non-uniform xi would weight the newest entry by xi[0]
+    np.testing.assert_allclose(
+        jnp.dot(jnp.asarray([1.0, 0.0, 0.0]), h), 3.0)
+
+
+def test_tree_sqnorm_mixed_dtype():
+    tree = {"a": jnp.ones((2, 2), jnp.bfloat16),
+            "b": jnp.full((3,), 2.0, jnp.float32),
+            "c": jnp.ones((), jnp.float16)}
+    out = lag.tree_sqnorm(tree)
+    assert out.dtype == jnp.float32
+    np.testing.assert_allclose(out, 4.0 + 12.0 + 1.0)
+
+
+def test_tree_sqnorm_empty_tree():
+    out = lag.tree_sqnorm({})
+    assert out.shape == () and out.dtype == jnp.float32
+    np.testing.assert_allclose(out, 0.0)
+    np.testing.assert_allclose(lag.tree_sqnorm(None), 0.0)
+
+
+def test_worker_round_ps_requires_L_m():
+    cfg = lag.LAGConfig(num_workers=2, alpha=1.0, D=1, xi=1.0, rule="ps")
+    ws = lag.WorkerState(grad_hat={"w": jnp.zeros(2)},
+                         theta_hat={"w": jnp.zeros(2)})
+    with pytest.raises(ValueError, match="L_m"):
+        lag.worker_round({"w": jnp.ones(2)}, {"w": jnp.ones(2)}, ws,
+                         jnp.asarray([1.0]), cfg)
+
+
+def test_worker_round_ps_requires_theta_hat():
+    cfg = lag.LAGConfig(num_workers=2, alpha=1.0, D=1, xi=1.0, rule="ps")
+    ws = lag.WorkerState(grad_hat={"w": jnp.zeros(2)}, theta_hat=None)
+    with pytest.raises(ValueError, match="theta_hat"):
+        lag.worker_round({"w": jnp.ones(2)}, {"w": jnp.ones(2)}, ws,
+                         jnp.asarray([1.0]), cfg, L_m=jnp.asarray(1.0))
+
+
+def test_worker_round_unknown_rule():
+    cfg = lag.LAGConfig(num_workers=2, alpha=1.0, D=1, xi=1.0, rule="nope")
+    ws = lag.WorkerState(grad_hat={"w": jnp.zeros(2)}, theta_hat=None)
+    with pytest.raises(ValueError, match="unknown LAG rule"):
+        lag.worker_round({"w": jnp.ones(2)}, {"w": jnp.ones(2)}, ws,
+                         jnp.asarray([1.0]), cfg)
+
+
+# ---------------------------------------------------------------------------
 # Theory-level checks on convex problems
 # ---------------------------------------------------------------------------
 
@@ -117,7 +185,12 @@ def test_lag_saves_communication_heterogeneous():
 def test_lemma4_small_Lm_workers_upload_less():
     prob = convex.synthetic("linreg", num_workers=9, seed=0)
     r = simulate.run(prob, "lag-wk", K=500)
-    uploads = r.comm_mask.sum(axis=0)
+    # count uploads over the descent phase (the regime Lemma 4 / Fig. 3
+    # address): once f32 hits *exact* convergence the trigger RHS
+    # underflows to 0 and round-off residues fire meaningless uploads
+    # (see repro.core.lag.wk_communicate docstring)
+    k_conv = r.iters_to(1e-6) or len(r.losses)
+    uploads = r.comm_mask[:max(k_conv, 50)].sum(axis=0)
     corr = np.corrcoef(np.asarray(prob.L_m), uploads)[0, 1]
     assert corr > 0.5, (uploads, corr)
 
