@@ -10,12 +10,23 @@ list of (name, passed, detail) validating the paper's qualitative results:
   Fig. 7  Gisette-shaped logistic regression
   Tab. 5  communication complexity at M = 9, 18, 27
 
+plus the ``repro.comm`` policy comparison (rounds AND wire bytes to target
+accuracy per policy — LAQ's b-bit uploads only show up in bytes).  Run as a
+script to write the trajectory artifact:
+
+  PYTHONPATH=src python -m benchmarks.lag_convex [--K N] [--bits B] [--out PATH]
+
+writes ``BENCH_lag_convex.json`` so successive PRs can diff communication
+rounds and wire bytes per policy.
+
 The container has no UCI access: stand-ins are shape/conditioning matched
 (DESIGN.md §7), so we validate orderings and reduction ratios, not the
 paper's exact table values.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 from typing import Dict, List, Tuple
 
@@ -29,6 +40,7 @@ from repro.core import convex, simulate
 
 EPS = 1e-8
 ALGOS = ["gd", "lag-wk", "lag-ps", "cyc-iag", "num-iag"]
+POLICY_ALGOS = ["gd", "lag-wk", "lag-ps", "laq", "lasg-wk"]
 
 
 def _run_suite(problem, K: int, name: str) -> Tuple[List[dict], Dict[str, simulate.RunResult]]:
@@ -128,8 +140,58 @@ def table5_worker_scaling(K: int = 5000):
     return rows, claims
 
 
+def policy_comparison(K: int = 3000, bits: int = 4):
+    """Every ``repro.comm`` policy on the fig-3 problem: iterations,
+    communication ROUNDS and wire BYTES to the 1e-8 optimality gap.
+
+    The point LAQ makes (Sun et al. 2019): savings must be measured in
+    bytes — LAQ uploads about as often as LAG-WK but each upload is a b-bit
+    quantized innovation, ~32/b× smaller than a dense float upload.
+    """
+    _, res = _policy_comparison_results(K=K, bits=bits)
+    return _policy_rows_claims(res, bits)
+
+
+def _policy_rows_claims(res, bits: int):
+    rows, claims = [], []
+    for algo, r in res.items():
+        rows.append({
+            "name": f"policy_cmp/{algo}",
+            "us_per_call": 0.0,
+            "derived": f"iters={r.iters_to(EPS)};comms={r.comms_to(EPS)};"
+                       f"bytes={r.bytes_to(EPS)}",
+        })
+    ok_all = all(r.iters_to(EPS) is not None for r in res.values())
+    claims.append(("policy_cmp: all policies converge to 1e-8", ok_all, ""))
+    if ok_all:
+        b_wk, b_laq = res["lag-wk"].bytes_to(EPS), res["laq"].bytes_to(EPS)
+        claims.append((f"policy_cmp: LAQ@{bits}b wire bytes < ½ LAG-WK's",
+                       b_laq < 0.5 * b_wk, f"{b_laq:.0f} vs {b_wk:.0f}"))
+        c_gd, c_wk = res["gd"].comms_to(EPS), res["lag-wk"].comms_to(EPS)
+        claims.append(("policy_cmp: LAG-WK comms < GD comms",
+                       c_wk < c_gd, f"{c_wk} vs {c_gd}"))
+        claims.append(("policy_cmp: LASG-WK ≡ LAG-WK on full batch",
+                       res["lasg-wk"].comms_to(EPS) == c_wk,
+                       f"{res['lasg-wk'].comms_to(EPS)} vs {c_wk}"))
+    return rows, claims
+
+
+def _policy_comparison_results(K: int, bits: int):
+    prob = convex.synthetic("linreg", num_workers=9, seed=0,
+                            dtype=jnp.float64)
+    _, opt = prob.optimum()
+    res = {}
+    for algo in POLICY_ALGOS:
+        t0 = time.time()
+        r = simulate.run(prob, algo, K=K, opt_loss=opt, bits=bits)
+        res[algo] = (r, time.time() - t0)
+    return prob, {a: r for a, (r, _) in res.items()}
+
+
 ALL_BENCHES = [fig3_linreg_increasing, fig4_logreg_uniform, fig5_linreg_real,
-               fig6_logreg_real, fig7_gisette, table5_worker_scaling]
+               fig6_logreg_real, fig7_gisette, table5_worker_scaling,
+               policy_comparison]
+
 
 
 def prox_lasso(K: int = 5000):
@@ -187,3 +249,42 @@ def xi_tradeoff(K: int = 3000):
                        all(a > b for a, b in zip(per_round, per_round[1:])),
                        str([round(p, 2) for p in per_round])))
     return rows, claims
+
+
+def main(argv=None) -> int:
+    """Write BENCH_lag_convex.json: per-policy rounds AND wire bytes to the
+    target accuracy, so the convex-bench trajectory can be diffed PR-to-PR."""
+    p = argparse.ArgumentParser()
+    p.add_argument("--K", type=int, default=3000)
+    p.add_argument("--bits", type=int, default=4)
+    p.add_argument("--out", default="BENCH_lag_convex.json")
+    args = p.parse_args(argv)
+
+    _, res = _policy_comparison_results(K=args.K, bits=args.bits)
+    _, claims = _policy_rows_claims(res, args.bits)
+    policies = {}
+    for algo, r in res.items():
+        policies[algo] = {
+            "iters_to_eps": r.iters_to(EPS),
+            "comm_rounds_to_eps": r.comms_to(EPS),
+            "wire_bytes_to_eps": r.bytes_to(EPS),
+            "bytes_per_upload": r.bytes_per_upload,
+        }
+    rec = {
+        "bench": "lag_convex",
+        "problem": "fig3 linreg M=9 increasing L_m, float64",
+        "eps": EPS,
+        "K": args.K,
+        "laq_bits": args.bits,
+        "policies": policies,
+        "claims": [{"name": n, "ok": bool(ok), "detail": d}
+                   for n, ok, d in claims],
+    }
+    with open(args.out, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(json.dumps(rec, indent=1))
+    return 0 if all(c["ok"] for c in rec["claims"]) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

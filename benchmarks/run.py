@@ -44,6 +44,8 @@ def main(argv=None) -> int:
             K=1500 if args.quick else 5000)),
         ("xi_tradeoff", lambda: lag_convex.xi_tradeoff(
             K=1500 if args.quick else 3000)),
+        ("policy_cmp", lambda: lag_convex.policy_comparison(
+            K=1500 if args.quick else 3000)),
     ]
     for name, fn in suites:
         try:

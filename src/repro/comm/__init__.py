@@ -1,0 +1,61 @@
+"""``repro.comm`` — pluggable communication policies for lazy distributed
+learning.
+
+One protocol (``CommPolicy``: ``init_state`` / ``should_upload`` /
+``encode`` / ``decode`` / ``wire_bytes``) behind every driver in the repo:
+
+  GDPolicy      always-upload synchronous baseline
+  LAGWKPolicy   LAG worker-side trigger (15a)          [Chen et al. 2018]
+  LAGPSPolicy   LAG server-side trigger (15b)          [Chen et al. 2018]
+  LAQPolicy     b-bit quantized lazy uploads with
+                error feedback                         [Sun et al. 2019]
+  LASGWKPolicy  stochastic worker trigger              [Chen et al. 2020]
+
+Drivers (``repro.core.simulate.run``, ``repro.dist.lag_trainer``,
+``repro.dist.pod_lag``) take a policy object or build one from an algo
+name via :func:`make_policy`.
+"""
+from repro.comm.base import CommPolicy, CommRound, PolicyState, run_round
+from repro.comm.laq import LAQPolicy
+from repro.comm.policies import (GDPolicy, LAGPSPolicy, LAGWKPolicy,
+                                 LASGWKPolicy)
+
+# algo name → policy class; trainer-only aliases (adam server steps) reuse
+# the matching trigger policy — the server optimizer is the DRIVER's switch,
+# communication is the policy's.
+POLICIES = {
+    "gd": GDPolicy,
+    "lag-wk": LAGWKPolicy,
+    "lag-ps": LAGPSPolicy,
+    "laq": LAQPolicy,
+    "lasg-wk": LASGWKPolicy,
+    "adam": GDPolicy,
+    "lag-adam": LAGWKPolicy,
+}
+
+
+def make_policy(algo: str, *, bits: int = 4, use_pallas: bool = False,
+                sqnorm_fn=None) -> CommPolicy:
+    """Build the ``CommPolicy`` for an algo name.
+
+    ``bits``/``use_pallas`` only reach LAQ; ``sqnorm_fn`` (e.g. the Pallas
+    fused ``repro.kernels.lag_trigger.ops.fused_tree_sqnorm``) reaches every
+    trigger's LHS.
+    """
+    if algo not in POLICIES:
+        raise ValueError(f"unknown comm policy {algo!r}; known: "
+                         f"{tuple(POLICIES)}")
+    cls = POLICIES[algo]
+    kw = {}
+    if sqnorm_fn is not None:
+        kw["sqnorm_fn"] = sqnorm_fn
+    if cls is LAQPolicy:
+        kw.update(bits=bits, use_pallas=use_pallas)
+    return cls(**kw)
+
+
+__all__ = [
+    "CommPolicy", "CommRound", "PolicyState", "run_round", "make_policy",
+    "POLICIES", "GDPolicy", "LAGWKPolicy", "LAGPSPolicy", "LAQPolicy",
+    "LASGWKPolicy",
+]

@@ -1,0 +1,174 @@
+"""The communication-policy protocol: WHO uploads WHAT, in HOW many bytes.
+
+LAG (Chen et al., NIPS 2018) is one point in a family of lazy-communication
+rules — LAQ adds quantized lazy uploads (Sun et al., 2019), LASG moves the
+trigger to stochastic gradients (Chen et al., 2020).  All of them factor
+into the same per-worker round:
+
+  1. ``encode``         build the *candidate* upload from the fresh gradient
+                        and the worker's mirror state (δ∇ for LAG, a b-bit
+                        quantized innovation for LAQ, …)
+  2. ``should_upload``  the trigger: is the candidate worth its wire bytes?
+  3. ``decode``         apply the masked payload on the server's ledger and
+                        advance the worker's mirror state
+  4. ``wire_bytes``     what one triggered upload actually costs on the wire
+
+``CommPolicy`` owns all four (plus ``init_state``); the drivers —
+``repro.core.simulate.run``, ``repro.dist.lag_trainer.make_train_step`` and
+``repro.dist.pod_lag.make_pod_lag_step`` — own batching, vmapping over
+workers/pods, the server update (eq. 4) and the iterate-lag history, and
+consume any policy through :func:`run_round`.
+
+Everything is functional and shape-polymorphic: policy state is a flat dict
+of pytrees (one leading worker dim added by the driver, stripped by vmap
+before the policy sees it), every method is jit/vmap/scan safe, and the
+server recursion's invariant ∇^k = Σ_m ĝ_m holds for every policy because
+``decode`` returns exactly the delta it folded into ``grad_hat``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lag
+
+Pytree = Any
+PolicyState = Dict[str, Pytree]
+
+
+# ---------------------------------------------------------------------------
+# Per-round context
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CommRound:
+    """Everything ONE worker sees when deciding/encoding one round.
+
+    Per-worker fields (``grad_new``, ``L_m``, ``grad_at_hat``) are the
+    un-stacked slices — the driver vmaps over the worker dim and builds a
+    ``CommRound`` inside the vmapped closure.  ``theta``, ``hist`` and
+    ``cfg`` are broadcast.
+    """
+    theta: Pytree                        # current iterate θ^k
+    grad_new: Pytree                     # fresh gradient ∇L_m(θ^k) (or ∇ℓ(θ^k;ξ^k))
+    hist: jnp.ndarray                    # (D,) ‖θ^{k+1-d} − θ^{k-d}‖² ring buffer
+    cfg: lag.LAGConfig                   # α, M, D, ξ — the trigger constants
+    L_m: Optional[jnp.ndarray] = None    # per-worker smoothness (PS rule only)
+    grad_at_hat: Optional[Pytree] = None  # ∇ℓ_m(θ̂_m; current sample) (LASG-WK)
+
+
+# ---------------------------------------------------------------------------
+# Protocol
+# ---------------------------------------------------------------------------
+
+class CommPolicy:
+    """Base class: the dense δ∇ = ∇L_m(θ^k) − ĝ_m upload family.
+
+    Subclasses override the trigger (``should_upload``) and/or the payload
+    (``encode``/``decode``/``wire_bytes``).  Class attributes tell drivers
+    which optional inputs/state to provision:
+
+      ``state_keys``         keys of the per-worker state dict this policy
+                             reads and writes (subset of the driver's
+                             ``state["lag"]`` group, checkpoint-compatible)
+      ``needs_theta_hat``    driver stores the last-upload iterate θ̂_m
+      ``needs_L_m``          driver supplies per-worker smoothness in ctx
+      ``needs_grad_at_hat``  driver evaluates ∇ℓ_m(θ̂_m) on the CURRENT
+                             sample (second vmapped backward pass)
+    """
+    name: str = "base"
+    state_keys: Tuple[str, ...] = ("grad_hat",)
+    needs_theta_hat: bool = False
+    needs_L_m: bool = False
+    needs_grad_at_hat: bool = False
+
+    def __init__(self, sqnorm_fn: Callable[[Pytree], jnp.ndarray] = lag.tree_sqnorm):
+        # injectable so drivers can supply a model-axis-psum'd or
+        # Pallas-fused squared norm (repro.kernels.lag_trigger)
+        self.sqnorm_fn = sqnorm_fn
+
+    # -- state --------------------------------------------------------------
+    def init_state(self, grad0: Pytree,
+                   theta0: Optional[Pytree] = None) -> PolicyState:
+        """Per-worker mirror state from a zeros-like gradient template.
+
+        Zero ``grad_hat`` with an empty history reproduces the paper's
+        all-upload initialization: round 0 triggers every worker.  The
+        driver may pass stacked (W, …) templates — ``init_state`` is
+        shape-polymorphic.
+        """
+        st: PolicyState = {"grad_hat": grad0}
+        if self.needs_theta_hat:
+            if theta0 is None:
+                raise ValueError(f"{self.name} policy needs theta0")
+            st["theta_hat"] = theta0
+        return st
+
+    # -- the four protocol methods ------------------------------------------
+    def encode(self, ctx: CommRound, st: PolicyState
+               ) -> Tuple[Pytree, Dict[str, Any]]:
+        """Candidate upload (payload, aux).  Dense family: the gradient
+        innovation δ∇ = ∇L_m(θ^k) − ĝ_m, bit-exactly the masked-delta math
+        of the pre-policy drivers (stale ĝ cast to the fresh grad dtype)."""
+        payload = jax.tree_util.tree_map(
+            lambda g, gh: g - gh.astype(g.dtype), ctx.grad_new,
+            st["grad_hat"])
+        return payload, {}
+
+    def should_upload(self, ctx: CommRound, st: PolicyState, payload: Pytree,
+                      aux: Dict[str, Any]) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def decode(self, ctx: CommRound, st: PolicyState, payload: Pytree,
+               aux: Dict[str, Any], comm: jnp.ndarray
+               ) -> Tuple[Pytree, PolicyState]:
+        """(server-side δ∇ contribution, advanced worker state).
+
+        The returned delta is all-zeros when ``comm`` is False, and
+        ``grad_hat`` absorbs exactly that delta — the Σ_m ĝ_m = ∇^k
+        invariant every driver relies on.
+        """
+        delta = jax.tree_util.tree_map(
+            lambda p: comm.astype(p.dtype) * p, payload)
+        new_st = dict(st)
+        new_st["grad_hat"] = jax.tree_util.tree_map(
+            lambda gh, d: gh + d.astype(gh.dtype), st["grad_hat"], delta)
+        if "theta_hat" in st:
+            new_st["theta_hat"] = lag.tree_select(comm, ctx.theta,
+                                                  st["theta_hat"])
+        return delta, new_st
+
+    def wire_bytes(self, grad_like: Pytree) -> float:
+        """Bytes ONE triggered upload of ``grad_like`` puts on the wire.
+        Dense family: the raw payload (size × itemsize per leaf)."""
+        return float(sum(l.size * jnp.dtype(l.dtype).itemsize
+                         for l in jax.tree_util.tree_leaves(grad_like)))
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"{type(self).__name__}(name={self.name!r})"
+
+
+# ---------------------------------------------------------------------------
+# Driver entry point
+# ---------------------------------------------------------------------------
+
+def run_round(policy: CommPolicy, ctx: CommRound, st: PolicyState,
+              comm_override: Optional[jnp.ndarray] = None
+              ) -> Tuple[jnp.ndarray, Pytree, PolicyState]:
+    """One worker's full round: encode → trigger → decode.
+
+    Returns (comm: () bool, delta: pytree, new_state).  Drivers vmap this
+    over the worker/pod dim.  ``comm_override`` (a () bool) replaces the
+    trigger decision for schedule-driven baselines (cyc-IAG, num-IAG) —
+    the payload/state mechanics stay the policy's.
+    """
+    payload, aux = policy.encode(ctx, st)
+    if comm_override is None:
+        comm = policy.should_upload(ctx, st, payload, aux)
+    else:
+        comm = comm_override
+    delta, new_st = policy.decode(ctx, st, payload, aux, comm)
+    return comm, delta, new_st

@@ -1,0 +1,101 @@
+"""LAQ — Lazily Aggregated Quantized gradients (Sun et al., NeurIPS 2019).
+
+LAQ composes two savings the upload counters alone cannot see:
+
+  * **lazy**: the 15a-style trigger skips workers whose innovation is small
+    (exactly LAG's mechanism), and
+  * **quantized**: a triggered worker uploads a b-bit quantization of its
+    innovation, not the raw float32 tree — b = 4 moves ~8× fewer wire bytes
+    per upload (``wire_bytes`` declares this, so traffic accounting in the
+    trainer counters / benchmarks reflects it).
+
+Per-worker round (server mirrors q̂_m, worker keeps residual e_m):
+
+  v_m   = (∇L_m(θ^k) − q̂_m) + e_m          error feedback folds the
+                                            previous quantization error
+                                            into this round's innovation
+  p_m   = Q_b(v_m)                          per-leaf symmetric uniform b-bit
+                                            grid, step = max|v|/(2^{b−1}−1)
+  upload iff ‖p_m‖² > RHS                   the 15a trigger with the
+                                            residual-compensated, actually
+                                            transmittable innovation as LHS
+  on upload:  q̂_m ← q̂_m + p_m,  e_m ← v_m − p_m
+  on skip:    q̂_m, e_m unchanged           (the innovation is not lost — it
+                                            reappears in the next round's v)
+
+The server recursion is eq. (4) verbatim with δ∇_m = p_m: ∇^k = Σ_m q̂_m
+stays exact because decode folds exactly the transmitted payload into q̂.
+Because the quantizer scale is the innovation's own absmax, the
+quantization error contracts together with the iterates and LAQ converges
+to the same accuracy targets as LAG (benchmarks/lag_convex.py measures
+bytes-to-ε).  Encode is served by ``repro.kernels.lag_trigger`` — the fused
+Pallas quantize+residual+sqnorm pass (one HBM sweep after the absmax pass)
+or the jnp oracle on CPU.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm.base import CommPolicy, CommRound, PolicyState, Pytree
+from repro.core import lag
+from repro.kernels.lag_trigger import ops as lag_ops
+
+
+class LAQPolicy(CommPolicy):
+    """b-bit quantized lazy uploads with error feedback.
+
+    ``grad_hat`` doubles as the server's mirror q̂_m (the name is kept so
+    trainer state / checkpoints stay layout-compatible across policies);
+    ``resid`` is the float32 error-feedback residual e_m.
+
+    ``use_pallas`` selects the fused Pallas encode (interpret mode off-TPU);
+    the default jnp path is what CPU CI runs.
+    """
+    name = "laq"
+    state_keys = ("grad_hat", "resid")
+
+    def __init__(self, bits: int = 4, use_pallas: bool = False,
+                 sqnorm_fn: Callable[[Pytree], jnp.ndarray] = lag.tree_sqnorm):
+        super().__init__(sqnorm_fn=sqnorm_fn)
+        if not 2 <= bits <= 16:
+            raise ValueError(f"LAQ bits must be in [2, 16], got {bits}")
+        self.bits = bits
+        self.use_pallas = use_pallas
+
+    def init_state(self, grad0: Pytree,
+                   theta0: Optional[Pytree] = None) -> PolicyState:
+        return {
+            "grad_hat": grad0,
+            "resid": jax.tree_util.tree_map(
+                lambda g: jnp.zeros(g.shape, jnp.float32), grad0),
+        }
+
+    def encode(self, ctx: CommRound, st: PolicyState
+               ) -> Tuple[Pytree, Dict[str, Any]]:
+        payload, resid_new, lhs = lag_ops.laq_encode(
+            ctx.grad_new, st["grad_hat"], st["resid"], bits=self.bits,
+            use_ref=not self.use_pallas)
+        return payload, {"resid_new": resid_new, "lhs_sq": lhs}
+
+    def should_upload(self, ctx: CommRound, st: PolicyState, payload: Pytree,
+                      aux: Dict[str, Any]) -> jnp.ndarray:
+        return aux["lhs_sq"] > lag.trigger_rhs(ctx.hist, ctx.cfg)
+
+    def decode(self, ctx: CommRound, st: PolicyState, payload: Pytree,
+               aux: Dict[str, Any], comm: jnp.ndarray
+               ) -> Tuple[Pytree, PolicyState]:
+        # base decode masks the payload into q̂ (the Σ ĝ_m = ∇^k fold);
+        # LAQ only adds the residual advance: e ← v − Q(v) on upload,
+        # unchanged on skip (the innovation re-enters next round via q̂)
+        delta, new_st = super().decode(ctx, st, payload, aux, comm)
+        new_st["resid"] = lag.tree_select(comm, aux["resid_new"],
+                                          st["resid"])
+        return delta, new_st
+
+    def wire_bytes(self, grad_like: Pytree) -> float:
+        """b bits per coordinate + one float32 scale per leaf."""
+        leaves = jax.tree_util.tree_leaves(grad_like)
+        return float(sum(l.size * self.bits / 8.0 + 4.0 for l in leaves))

@@ -59,6 +59,15 @@ class Problem:
         )(theta))
         return g(self.X, self.y)
 
+    def worker_grads_at(self, thetas: jnp.ndarray) -> jnp.ndarray:
+        """(M, d) per-worker gradients with worker m evaluated at its OWN
+        iterate ``thetas[m]`` — the ∇L_m(θ̂_m) the LASG-WK trigger
+        differences against."""
+        g = jax.vmap(lambda X, y, t: jax.grad(
+            lambda th: _loss(self.kind, X, y, th, self.lam / self.num_workers)
+        )(t))
+        return g(self.X, self.y, thetas)
+
     def optimum(self, iters: int = 200_000) -> Tuple[jnp.ndarray, float]:
         """High-accuracy reference minimizer (GD with α = 1/L, long run;
         linreg solved in closed form)."""

@@ -2,8 +2,10 @@
 
 This module implements the paper's update (eq. 4) and both trigger rules
 (eq. 15a worker-side "LAG-WK", eq. 15b server-side "LAG-PS") as *pure,
-per-worker* functions over arbitrary gradient pytrees.  Two drivers reuse
-them:
+per-worker* functions over arbitrary gradient pytrees.  The
+``repro.comm`` policy layer packages these rules (plus LAQ and LASG-WK
+variants) behind one ``CommPolicy`` protocol, and the drivers consume
+policies rather than calling the rules directly:
 
 * ``repro.core.simulate.run`` — the parameter-server simulation used for
   the paper's convex experiments (workers as a stacked leading axis,
@@ -14,7 +16,10 @@ them:
   ``repro.dist.pod_lag.make_pod_lag_step`` — the pod-level variant where
   the cross-pod collective is *actually skipped* via ``lax.cond``.
 
-Everything is functional: state in, state out, jit/scan friendly.
+The shared machinery every policy builds on stays here: the iterate-lag
+ring buffer (eq. 14), ``trigger_rhs``, ``server_update`` and the pytree
+helpers.  Everything is functional: state in, state out, jit/scan
+friendly.
 """
 from __future__ import annotations
 

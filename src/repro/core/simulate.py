@@ -1,16 +1,25 @@
-"""Parameter-server simulation driver for LAG and its baselines.
+"""Parameter-server simulation driver for lazy-communication policies.
 
-Runs the paper's Sec.-4 experiments: full-batch distributed optimization of a
-``repro.core.convex.Problem`` under one of
+Runs the paper's Sec.-4 experiments: full-batch distributed optimization of
+a ``repro.core.convex.Problem`` under one of
 
   gd       — batch gradient descent, all M workers upload each round (eq. 2)
   lag-wk   — LAG with the worker-side trigger (15a)
   lag-ps   — LAG with the server-side trigger (15b)
+  laq      — LAG + b-bit quantized uploads with error feedback (LAQ,
+             Sun et al. 2019) — fewer *bytes* per upload, not just fewer
+             uploads
+  lasg-wk  — the stochastic-trigger variant (LASG-WK, Chen et al. 2020);
+             with the full-batch gradients used here it coincides with
+             lag-wk by construction (the correlated-difference trigger
+             degenerates to 15a), which doubles as a consistency check
   cyc-iag  — cyclic incremental aggregated gradient (one worker per round)
   num-iag  — IAG with worker m sampled ∝ L_m (one worker per round)
 
-All five share the lazy-aggregation recursion (4); they differ only in the
-per-round communication mask.  The whole K-iteration run is one lax.scan.
+All algorithms share the lazy-aggregation recursion (4); WHO uploads WHAT
+is delegated to a ``repro.comm.CommPolicy`` (the IAG baselines are the GD
+payload under a schedule, not a trigger, so they keep a driver-side mask).
+The whole K-iteration run is one lax.scan.
 """
 from __future__ import annotations
 
@@ -24,7 +33,9 @@ import numpy as np
 from repro.core import lag
 from repro.core.convex import Problem
 
-ALGOS = ("gd", "lag-wk", "lag-ps", "cyc-iag", "num-iag")
+ALGOS = ("gd", "lag-wk", "lag-ps", "laq", "lasg-wk", "cyc-iag", "num-iag")
+# algos whose round is a CommPolicy trigger (vs a driver-side schedule)
+POLICY_ALGOS = ("gd", "lag-wk", "lag-ps", "laq", "lasg-wk")
 
 
 @dataclasses.dataclass
@@ -33,6 +44,7 @@ class RunResult:
     losses: np.ndarray          # (K,) L(θ^k)
     comm_mask: np.ndarray       # (K, M) bool — worker m uploaded at round k
     opt_loss: float
+    bytes_per_upload: float = 0.0   # policy-declared wire bytes of ONE upload
 
     @property
     def comms_per_iter(self) -> np.ndarray:
@@ -41,6 +53,12 @@ class RunResult:
     @property
     def cum_comms(self) -> np.ndarray:
         return np.cumsum(self.comms_per_iter)
+
+    @property
+    def cum_wire_bytes(self) -> np.ndarray:
+        """Cumulative policy-declared bytes on the wire (LAQ's b-bit uploads
+        cost ~b/32 of a dense one — upload counts alone can't see that)."""
+        return self.cum_comms * self.bytes_per_upload
 
     def iters_to(self, eps: float) -> Optional[int]:
         err = self.losses - self.opt_loss
@@ -51,21 +69,30 @@ class RunResult:
         k = self.iters_to(eps)
         return int(self.cum_comms[k]) if k is not None else None
 
+    def bytes_to(self, eps: float) -> Optional[float]:
+        k = self.iters_to(eps)
+        return float(self.cum_wire_bytes[k]) if k is not None else None
+
 
 def run(problem: Problem, algo: str, *, K: int = 2000,
         D: int = 10, xi: Optional[float] = None, alpha: Optional[float] = None,
         seed: int = 0, theta0: Optional[jnp.ndarray] = None,
-        opt_loss: Optional[float] = None, l1: float = 0.0) -> RunResult:
+        opt_loss: Optional[float] = None, l1: float = 0.0,
+        policy=None, bits: int = 4) -> RunResult:
     """Simulate ``K`` rounds of ``algo`` on ``problem``.
 
-    Defaults follow the paper: α = 1/L for GD/LAG and 1/(M·L) for the IAG
-    variants; ξ = 1/D for LAG-WK and 10/D for LAG-PS; D = 10.
+    Defaults follow the paper: α = 1/L for GD/LAG/LAQ/LASG and 1/(M·L) for
+    the IAG variants; ξ = 1/D for the worker-side triggers and 10/D for
+    LAG-PS; D = 10.  ``policy`` overrides the algo→``repro.comm`` mapping
+    (pass any ``CommPolicy``); ``bits`` sets LAQ's quantization width.
 
     ``l1 > 0`` enables PROXIMAL LAG (the extension the paper flags in R2 /
     Conclusions): the server applies soft-thresholding prox_{α·l1·‖·‖₁}
     after every lazily aggregated step, and the reported "loss" becomes the
     composite objective L(θ) + l1·‖θ‖₁.
     """
+    from repro import comm as comm_lib   # function-level: core ↔ comm cycle
+
     if algo not in ALGOS:
         raise ValueError(f"unknown algo {algo!r}")
     M, d = problem.num_workers, problem.dim
@@ -75,15 +102,23 @@ def run(problem: Problem, algo: str, *, K: int = 2000,
         xi = (10.0 / D) if algo == "lag-ps" else (1.0 / D)
     cfg = lag.LAGConfig(num_workers=M, alpha=float(alpha), D=D, xi=float(xi),
                         rule="ps" if algo == "lag-ps" else "wk")
+    if policy is None:
+        # IAG variants ride the GD payload under a driver-side schedule
+        policy = comm_lib.make_policy(
+            algo if algo in POLICY_ALGOS else "gd", bits=bits)
+    scheduled = algo not in POLICY_ALGOS
 
     theta0 = jnp.zeros((d,), problem.X.dtype) if theta0 is None else theta0
-    # Initialization (paper Alg. 1/2 line 2): all workers upload at k=0.
+    # Initialization (paper Alg. 1/2 line 2): all workers upload at k=0 —
+    # the policy mirrors start at the exact full-precision ∇L_m(θ⁰).
     g0 = problem.worker_grads(theta0)                      # (M, d)
+    pst0 = policy.init_state(
+        g0, jnp.broadcast_to(theta0, (M, d)) if policy.needs_theta_hat
+        else None)
     state0 = dict(
         theta=theta0,
         nabla=jnp.sum(g0, axis=0),
-        grad_hat=g0,
-        theta_hat=jnp.broadcast_to(theta0, (M, d)),
+        pst=pst0,
         hist=lag.hist_init(D),
         key=jax.random.PRNGKey(seed),
         k=jnp.zeros((), jnp.int32),
@@ -91,24 +126,14 @@ def run(problem: Problem, algo: str, *, K: int = 2000,
     L_m = problem.L_m
     p_num = L_m / jnp.sum(L_m)
 
-    def comm_mask_for(state, grads_new):
+    def scheduled_mask(state):
         k, key = state["k"], state["key"]
-        if algo == "gd":
-            return jnp.ones((M,), bool), key
         if algo == "cyc-iag":
             return jnp.arange(M) == (k % M), key
-        if algo == "num-iag":
-            key, sub = jax.random.split(key)
-            m = jax.random.choice(sub, M, p=p_num)
-            return jnp.arange(M) == m, key
-        if algo == "lag-wk":
-            f = jax.vmap(lambda gn, gh: lag.wk_communicate(
-                gn, gh, state["hist"], cfg))
-            return f(grads_new, state["grad_hat"]), key
-        # lag-ps
-        f = jax.vmap(lambda th, lm: lag.ps_communicate(
-            state["theta"], th, lm, state["hist"], cfg))
-        return f(state["theta_hat"], L_m), key
+        # num-iag
+        key, sub = jax.random.split(key)
+        m = jax.random.choice(sub, M, p=p_num)
+        return jnp.arange(M) == m, key
 
     def step(state, _):
         theta = state["theta"]
@@ -116,9 +141,26 @@ def run(problem: Problem, algo: str, *, K: int = 2000,
         if l1 > 0.0:
             loss = loss + l1 * jnp.sum(jnp.abs(theta))
         grads_new = problem.worker_grads(theta)            # (M, d)
-        comm, key = comm_mask_for(state, grads_new)
-        maskf = comm.astype(jnp.float32)[:, None]
-        delta = maskf * (grads_new - state["grad_hat"])    # (M, d)
+        if policy.needs_grad_at_hat:
+            grad_at_hat = problem.worker_grads_at(state["pst"]["theta_hat"])
+        else:
+            grad_at_hat = grads_new     # unused placeholder, DCE'd
+        if scheduled:
+            comm_override, key = scheduled_mask(state)
+        else:
+            comm_override, key = jnp.zeros((M,), bool), state["key"]
+
+        def one_worker(g, pst_m, gah, ovr, lm):
+            ctx = comm_lib.CommRound(theta=theta, grad_new=g,
+                                     hist=state["hist"], cfg=cfg,
+                                     L_m=lm, grad_at_hat=gah)
+            return comm_lib.run_round(policy, ctx, pst_m,
+                                      comm_override=ovr if scheduled
+                                      else None)
+
+        comm, delta, new_pst = jax.vmap(one_worker)(
+            grads_new, state["pst"], grad_at_hat, comm_override, L_m)
+
         theta_new, nabla_new, hist_new = lag.server_update(
             theta, state["nabla"], jnp.sum(delta, axis=0), state["hist"], cfg)
         if l1 > 0.0:
@@ -133,8 +175,7 @@ def run(problem: Problem, algo: str, *, K: int = 2000,
         new_state = dict(
             theta=theta_new,
             nabla=nabla_new,
-            grad_hat=state["grad_hat"] + delta,
-            theta_hat=jnp.where(maskf > 0, theta, state["theta_hat"]),
+            pst=new_pst,
             hist=hist_new,
             key=key,
             k=state["k"] + 1,
@@ -146,4 +187,6 @@ def run(problem: Problem, algo: str, *, K: int = 2000,
     if opt_loss is None:
         _, opt_loss = problem.optimum()
     return RunResult(algo=algo, losses=np.asarray(losses),
-                     comm_mask=np.asarray(comm_mask), opt_loss=float(opt_loss))
+                     comm_mask=np.asarray(comm_mask),
+                     opt_loss=float(opt_loss),
+                     bytes_per_upload=policy.wire_bytes(g0[0]))

@@ -1,23 +1,27 @@
 """``repro.dist`` — the distributed-LAG training API.
 
-One import surface for everything between ``repro.core.lag`` (pure
-per-worker primitives) and the launch scripts:
+One import surface for everything between ``repro.comm`` (pluggable
+communication policies) / ``repro.core.lag`` (pure per-worker primitives)
+and the launch scripts:
 
   lag_trainer   TrainerConfig / init_state / make_train_step / split_batch
   sharding      spec_for + tree/batch specs & shardings (rule-based GSPMD)
   pod_lag       pod-level LAG where the cross-pod all-reduce is skipped
-  hlo_analysis  collective_bytes — wire-traffic accounting from HLO text
+  hlo_analysis  collective_bytes — wire-traffic accounting from HLO text,
+                plus logical_upload_bytes for policy-declared costs
 """
 from repro.dist import hlo_analysis, pod_lag, sharding
-from repro.dist.hlo_analysis import CollectiveStats, collective_bytes
+from repro.dist.hlo_analysis import (CollectiveStats, collective_bytes,
+                                     logical_upload_bytes)
 from repro.dist.lag_trainer import (ALGOS, TrainerConfig, init_state,
-                                    make_train_step, split_batch)
+                                    make_train_step, policy_rounds,
+                                    split_batch)
 from repro.dist.sharding import (batch_shardings, batch_specs, spec_for,
                                  tree_shardings, tree_specs)
 
 __all__ = [
     "ALGOS", "TrainerConfig", "init_state", "make_train_step", "split_batch",
-    "spec_for", "tree_specs", "tree_shardings", "batch_specs",
-    "batch_shardings", "pod_lag", "sharding", "hlo_analysis",
-    "collective_bytes", "CollectiveStats",
+    "policy_rounds", "spec_for", "tree_specs", "tree_shardings",
+    "batch_specs", "batch_shardings", "pod_lag", "sharding", "hlo_analysis",
+    "collective_bytes", "CollectiveStats", "logical_upload_bytes",
 ]

@@ -146,6 +146,33 @@ def _crosses_pod(groups: List[List[int]], pod_size: Optional[int]) -> bool:
     return any(len({m // pod_size for m in grp}) > 1 for grp in groups)
 
 
+def logical_upload_bytes(policy, grad_like, uploads: int = 1) -> float:
+    """Policy-declared wire bytes of ``uploads`` gradient uploads.
+
+    The HLO scan below charges collectives their *physical* buffer bytes —
+    but a compiled program moves f32 buffers even when the algorithm only
+    commits b bits per coordinate to the wire (LAQ's quantized innovations
+    are dequantized before the all-reduce).  Traffic reports should
+    therefore pair ``collective_bytes`` (what THIS compiled program moves)
+    with the policy-declared cost (what a deployment's transport layer
+    would move): ``policy.wire_bytes`` per triggered upload.
+    """
+    return float(uploads) * float(policy.wire_bytes(grad_like))
+
+
+def policy_traffic_summary(stats: "CollectiveStats", policy, grad_like,
+                           uploads: int) -> dict:
+    """One report combining physical HLO traffic with the policy's logical
+    wire cost — what benchmarks and dry-runs record per step."""
+    return {
+        "hlo": stats.as_dict(),
+        "policy": getattr(policy, "name", type(policy).__name__),
+        "uploads": int(uploads),
+        "logical_upload_bytes": logical_upload_bytes(policy, grad_like,
+                                                     uploads),
+    }
+
+
 def collective_bytes(hlo: str, pod_size: Optional[int] = None,
                      n_devices: Optional[int] = None) -> CollectiveStats:
     """Scan optimized HLO text and total per-collective wire bytes.

@@ -1,17 +1,23 @@
-"""Distributed LAG trainer: the paper's lazy aggregation inside a real
+"""Distributed LAG trainer: lazy-communication policies inside a real
 deep-learning training step.
 
 A "worker" here is a slice of the global batch (rows ``m·B/W:(m+1)·B/W``,
 the layout ``repro.data.make_heterogeneous_inputs`` produces).  Every step
-computes all W per-worker gradients in one vmapped backward pass, runs the
-per-worker LAG trigger from ``repro.core.lag``, and applies the server
-recursion (eq. 4): only triggered workers contribute their gradient
-*change* δ∇ to the aggregate ∇^k.  Algorithm choice is one config switch
-(LASG-style pluggability — Chen et al., 2020):
+computes all W per-worker gradients in one vmapped backward pass, hands
+each worker's round to a ``repro.comm.CommPolicy`` (trigger + upload
+payload), and applies the server recursion (eq. 4): only triggered workers
+contribute their payload δ∇ to the aggregate ∇^k.  Algorithm choice is one
+config switch:
 
   gd        every worker uploads every round (synchronous baseline)
   lag-wk    LAG with the worker-side trigger (15a) + SGD server step
   lag-ps    LAG with the server-side trigger (15b) + SGD server step
+  laq       LAG trigger on the b-bit quantized innovation with error
+            feedback (LAQ, Sun et al. 2019) — ~32/b× fewer wire bytes per
+            upload, reported by the policy-declared byte counters
+  lasg-wk   stochastic worker trigger (LASG-WK, Chen et al. 2020): the LHS
+            differences two gradients on the CURRENT minibatch (one extra
+            vmapped backward pass at the stale iterate θ̂_m)
   adam      every-round uploads, Adam server step (beyond-paper baseline)
   lag-adam  LAG-WK trigger + Adam server step (beyond-paper; known trigger
             pathology under preconditioning — see EXPERIMENTS.md)
@@ -19,12 +25,18 @@ recursion (eq. 4): only triggered workers contribute their gradient
 State is a flat dict pytree (checkpoint- and donation-friendly) with the
 LAG group under ``state["lag"]``:
 
-  grad_hat        (W, *param) per-worker ∇L_m(θ̂_m) — leading worker dim
+  grad_hat        (W, *param) per-worker policy mirror ĝ_m (q̂_m for LAQ)
   nabla           aggregate ∇^k = Σ_m grad_hat_m
   hist            (D,) iterate-lag ring buffer ‖θ^{k+1-d} − θ^{k-d}‖²
   comm_total      scalar upload counter (gd uploads = steps × W)
   comm_per_worker (W,) per-worker upload counts
-  theta_hat, L_m  lag-ps only: per-worker iterate copies + smoothness
+  theta_hat       lag-ps / lasg-wk: per-worker last-upload iterates
+  L_m             lag-ps only: per-worker smoothness estimates
+  resid           laq only: float32 error-feedback residuals e_m
+
+Wire traffic is policy-declared: metrics report ``wire_bytes_total`` =
+uploads × ``policy.wire_bytes(params)``, so LAQ's 4-bit uploads show up as
+~8× fewer bytes, not just fewer rounds.
 
 Sharding is applied OUTSIDE via ``repro.dist.sharding.tree_shardings`` —
 the step function itself is placement-free and jit/donate-friendly.
@@ -44,7 +56,7 @@ from repro.optim import optimizers
 
 Pytree = Any
 
-ALGOS = ("gd", "lag-wk", "lag-ps", "adam", "lag-adam")
+ALGOS = ("gd", "lag-wk", "lag-ps", "laq", "lasg-wk", "adam", "lag-adam")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,6 +69,11 @@ class TrainerConfig:
     (the data-parallel convention).  The triggers are exactly (15a)/(15b)
     with that same α, which makes the skip condition ≈ L_m ≤ √(ξD)/lr —
     smooth (low-noise) workers skip, rough ones upload (paper Lemma 4).
+
+    ``laq_bits`` sets LAQ's quantization width; ``use_pallas_comm`` routes
+    the trigger squared-norms AND LAQ's encode through the fused Pallas
+    kernels in ``repro.kernels.lag_trigger`` (default off: on CPU the
+    kernels run in interpret mode, which is for validation, not speed).
     """
     algo: str = "lag-wk"
     num_workers: int = 4
@@ -67,6 +84,8 @@ class TrainerConfig:
     momentum: float = 0.0           # SGD momentum for gd/lag-wk/lag-ps
     adam_b1: float = 0.9
     adam_b2: float = 0.999
+    laq_bits: int = 4               # LAQ quantization width [b]
+    use_pallas_comm: bool = False   # fused Pallas sqnorm + LAQ encode
 
     def __post_init__(self):
         if self.algo not in ALGOS:
@@ -87,6 +106,18 @@ class TrainerConfig:
         m = num_units or self.num_workers
         return lag.LAGConfig(num_workers=m, alpha=self.lr / m, D=self.D,
                              xi=self.xi, rule=self.lag_rule)
+
+    def comm_policy(self):
+        """The ``repro.comm`` policy this config selects (adam aliases map
+        to their trigger: adam → gd uploads, lag-adam → the 15a trigger)."""
+        from repro import comm
+        sqnorm_fn = None
+        if self.use_pallas_comm:
+            from repro.kernels.lag_trigger import ops as lag_ops
+            sqnorm_fn = lag_ops.fused_tree_sqnorm
+        return comm.make_policy(self.algo, bits=self.laq_bits,
+                                use_pallas=self.use_pallas_comm,
+                                sqnorm_fn=sqnorm_fn)
 
     def replace(self, **kw) -> "TrainerConfig":
         return dataclasses.replace(self, **kw)
@@ -130,24 +161,30 @@ def init_state(key, cfg: ModelConfig, tcfg: TrainerConfig) -> Dict:
     delivers the exact first GD step — the paper's all-upload init."""
     W = tcfg.num_workers
     params = model.init(key, cfg)
+    policy = tcfg.comm_policy()
     gh_dtype = jnp.dtype(tcfg.grad_hat_dtype) if tcfg.grad_hat_dtype \
         else None
 
     def stacked_zeros(p):
         return jnp.zeros((W,) + p.shape, gh_dtype or p.dtype)
 
-    lag_state = {
-        "grad_hat": jax.tree_util.tree_map(stacked_zeros, params),
+    grad0 = jax.tree_util.tree_map(stacked_zeros, params)
+    theta0 = None
+    if policy.needs_theta_hat:
+        # per-worker last-upload iterate copies θ̂_m, zero-initialized like
+        # grad_hat (round 0 fires for every worker either way)
+        theta0 = jax.tree_util.tree_map(
+            lambda p: jnp.zeros((W,) + p.shape, p.dtype), params)
+    lag_state = dict(policy.init_state(grad0, theta0))
+    lag_state.update({
         "nabla": jax.tree_util.tree_map(jnp.zeros_like, params),
         "hist": lag.hist_init(tcfg.D),
         "comm_total": jnp.zeros((), jnp.int32),
         "comm_per_worker": jnp.zeros((W,), jnp.int32),
-    }
-    if tcfg.algo == "lag-ps":
-        # per-worker iterate copies θ̂_m plus a smoothness estimate; with no
-        # oracle L_m for a deep net we use the 1/α heuristic (paper: α=1/L)
-        lag_state["theta_hat"] = jax.tree_util.tree_map(
-            lambda p: jnp.zeros((W,) + p.shape, p.dtype), params)
+    })
+    if policy.needs_L_m:
+        # with no oracle L_m for a deep net we use the 1/α heuristic
+        # (paper: α = 1/L)
         lag_state["L_m"] = jnp.full((W,), 1.0 / tcfg.lr, jnp.float32)
 
     state = {"params": params, "lag": lag_state,
@@ -164,23 +201,6 @@ def init_state(key, cfg: ModelConfig, tcfg: TrainerConfig) -> Dict:
 # Shared LAG-step pieces (also used by repro.dist.pod_lag)
 # ---------------------------------------------------------------------------
 
-def masked_delta_tree(comm: jnp.ndarray, grads: Pytree,
-                      grad_hat: Pytree) -> Pytree:
-    """mask_m · (∇L_m(θ^k) − ĝ_m): the per-unit uploads δ∇ of eq. (4),
-    stacked on the leading worker/pod dim."""
-    def one(g, gh):
-        mask = comm.astype(g.dtype).reshape(
-            comm.shape[:1] + (1,) * (g.ndim - 1))
-        return mask * (g - gh.astype(g.dtype))
-    return jax.tree_util.tree_map(one, grads, grad_hat)
-
-
-def apply_delta(grad_hat: Pytree, delta: Pytree) -> Pytree:
-    """ĝ_m ← ĝ_m + δ∇_m (== ∇L_m(θ^k) exactly for communicating units)."""
-    return jax.tree_util.tree_map(lambda gh, d: gh + d.astype(gh.dtype),
-                                  grad_hat, delta)
-
-
 def comm_counter_updates(lag_state: Dict, comm: jnp.ndarray
                          ) -> Tuple[jnp.ndarray, Dict]:
     """(int mask, {comm_total, comm_per_worker} updates) for this round."""
@@ -191,30 +211,41 @@ def comm_counter_updates(lag_state: Dict, comm: jnp.ndarray
     }
 
 
+def policy_rounds(policy, lagcfg: lag.LAGConfig, params: Pytree,
+                  grads: Pytree, lag_state: Dict,
+                  grad_at_hat: Optional[Pytree] = None):
+    """Vmap a ``CommPolicy`` over the leading worker/pod dim.
+
+    Returns (comm (W,) bool, delta stacked pytree, new policy-state dict) —
+    the stacked equivalents of ``repro.comm.run_round``.  Shared by the
+    flat trainer and ``repro.dist.pod_lag``.
+    """
+    W = jax.tree_util.tree_leaves(grads)[0].shape[0]
+    pst = {k: lag_state[k] for k in policy.state_keys}
+    L_arr = lag_state["L_m"] if policy.needs_L_m \
+        else jnp.zeros((W,), jnp.float32)
+    gah = grad_at_hat if grad_at_hat is not None else grads  # DCE'd if unused
+    hist = lag_state["hist"]
+
+    def one_worker(g, pst_m, gah_m, lm):
+        from repro.comm import CommRound, run_round
+        ctx = CommRound(theta=params, grad_new=g, hist=hist, cfg=lagcfg,
+                        L_m=lm, grad_at_hat=gah_m)
+        return run_round(policy, ctx, pst_m)
+
+    comm, delta, new_pst = jax.vmap(one_worker)(grads, pst, gah, L_arr)
+    return comm, delta, new_pst
+
+
 # ---------------------------------------------------------------------------
 # Train step
 # ---------------------------------------------------------------------------
-
-def _worker_mask(tcfg: TrainerConfig, lagcfg: lag.LAGConfig, params: Pytree,
-                 grads: Pytree, lag_state: Dict) -> jnp.ndarray:
-    """(W,) bool — which workers upload this round."""
-    W = tcfg.num_workers
-    hist = lag_state["hist"]
-    if tcfg.algo in ("gd", "adam"):
-        return jnp.ones((W,), bool)
-    if tcfg.algo == "lag-ps":
-        return jax.vmap(
-            lambda th, lm: lag.ps_communicate(params, th, lm, hist, lagcfg),
-            in_axes=(0, 0))(lag_state["theta_hat"], lag_state["L_m"])
-    return jax.vmap(
-        lambda g, gh: lag.wk_communicate(g, gh, hist, lagcfg),
-        in_axes=(0, 0))(grads, lag_state["grad_hat"])
-
 
 def make_train_step(cfg: ModelConfig, tcfg: TrainerConfig):
     """Build the jit/donate-friendly ``(state, batch) → (state, metrics)``."""
     W = tcfg.num_workers
     lagcfg = tcfg.lag_config()
+    policy = tcfg.comm_policy()
     opt = None
     if tcfg.uses_adam:
         opt = optimizers.adam(tcfg.lr, b1=tcfg.adam_b1, b2=tcfg.adam_b2)
@@ -230,11 +261,19 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainerConfig):
                 lambda p: model.loss_fn(p, cfg, b))(params))(shards)
         loss = jnp.mean(losses)
 
-        comm = _worker_mask(tcfg, lagcfg, params, grads, lag_state)
-        delta = masked_delta_tree(comm, grads, lag_state["grad_hat"])
+        grad_at_hat = None
+        if policy.needs_grad_at_hat:
+            # LASG-WK: ∇ℓ_m(θ̂_m) on the CURRENT shard — a second vmapped
+            # backward pass, each worker at its own stale iterate
+            grad_at_hat = jax.vmap(
+                lambda th, b: jax.grad(
+                    lambda p: model.loss_fn(p, cfg, b))(th),
+                in_axes=(0, 0))(lag_state["theta_hat"], shards)
+
+        comm, delta, new_pst = policy_rounds(
+            policy, lagcfg, params, grads, lag_state, grad_at_hat)
         sum_delta = jax.tree_util.tree_map(lambda d: jnp.sum(d, axis=0),
                                            delta)
-        new_grad_hat = apply_delta(lag_state["grad_hat"], delta)
 
         if opt is None:
             # paper server update (eq. 4): θ ← θ − α(∇^{k-1} + Σ δ∇)
@@ -254,27 +293,26 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainerConfig):
                 lag.tree_sqnorm(lag.tree_sub(new_params, params)))
 
         comm_i, counters = comm_counter_updates(lag_state, comm)
-        new_lag = dict(lag_state,
-                       grad_hat=new_grad_hat,
-                       nabla=new_nabla,
-                       hist=new_hist,
-                       **counters)
-        if tcfg.algo == "lag-ps":
-            new_lag["theta_hat"] = jax.tree_util.tree_map(
-                lambda th, p: jnp.where(
-                    comm.reshape((W,) + (1,) * p.ndim),
-                    p[None].astype(th.dtype), th),
-                lag_state["theta_hat"], params)
+        new_lag = dict(lag_state, nabla=new_nabla, hist=new_hist,
+                       **new_pst, **counters)
 
         new_state = dict(state, params=new_params, lag=new_lag,
                          step=state["step"] + 1)
         if new_opt is not None:
             new_state["opt"] = new_opt
 
+        # policy-declared traffic: ONE upload of the param-shaped gradient
+        # costs wire_bytes (a trace-time constant), so totals are exact
+        # rescalings of the upload counters
+        bytes_per_upload = policy.wire_bytes(params)
         metrics = {
             "loss": loss,
             "comm_this_round": jnp.sum(comm_i),
             "comm_total": new_lag["comm_total"],
+            "wire_bytes_this_round":
+                jnp.sum(comm_i).astype(jnp.float32) * bytes_per_upload,
+            "wire_bytes_total":
+                new_lag["comm_total"].astype(jnp.float32) * bytes_per_upload,
             "trigger_rhs": lag.trigger_rhs(lag_state["hist"], lagcfg),
         }
         return new_state, metrics

@@ -1,26 +1,29 @@
 """Pod-level LAG: the cross-pod all-reduce is *actually skipped*.
 
-Beyond-paper deployment of LAG on the TPU cost model: the lazy-aggregation
-unit is a whole pod (the DCI link between pods plays the paper's expensive
-worker→server WAN link).  Each pod computes the gradient of its own batch
-shard; the per-pod LAG-WK trigger decides whether any pod's gradient
-changed enough to be worth aggregating.  The cross-pod reduction of the
-gradient deltas sits inside ``lax.cond`` — on quiet rounds the conditional
-takes the zero branch and the compiled HLO moves **zero bytes** across the
-pod boundary (verified structurally by ``tests/test_dist.py``, which checks
-for an all-reduce inside an HLO conditional, and quantitatively by
+Beyond-paper deployment of lazy communication on the TPU cost model: the
+lazy-aggregation unit is a whole pod (the DCI link between pods plays the
+paper's expensive worker→server WAN link).  Each pod computes the gradient
+of its own batch shard; a per-pod ``repro.comm.CommPolicy`` decides whether
+any pod's payload is worth aggregating.  The cross-pod reduction of the
+deltas sits inside ``lax.cond`` — on quiet rounds the conditional takes the
+zero branch and the compiled HLO moves **zero bytes** across the pod
+boundary (verified structurally by ``tests/test_dist.py``, which checks for
+an all-reduce inside an HLO conditional, and quantitatively by
 ``repro.dist.hlo_analysis.collective_bytes(..., pod_size=…)``).
 
 The trajectory is bit-identical to running the unconditional reduction:
 when no pod triggers, every delta is exactly zero, so skipping the
-collective changes nothing except the wire traffic.
+collective changes nothing except the wire traffic.  Any policy plugs in —
+pod-LAQ additionally shrinks the bytes a NON-quiet round moves (the payload
+is the b-bit innovation), which ``metrics["wire_bytes_this_round"]``
+reports via the policy's declared cost.
 
 State layout matches ``repro.dist.lag_trainer`` with the worker dim sized
 ``n_pods`` plus a ``rounds_skipped`` counter.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,9 +31,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import lag
 from repro.dist import lag_trainer
-from repro.dist.lag_trainer import (TrainerConfig, apply_delta,
-                                    comm_counter_updates, masked_delta_tree,
-                                    split_batch)
+from repro.dist.lag_trainer import (TrainerConfig, comm_counter_updates,
+                                    policy_rounds, split_batch)
 from repro.models import model
 from repro.models.common import ModelConfig
 
@@ -52,9 +54,13 @@ def _pod_constraint(mesh, x: jnp.ndarray) -> jnp.ndarray:
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
 
 
-def make_pod_lag_step(cfg: ModelConfig, tcfg: TrainerConfig, mesh):
+def make_pod_lag_step(cfg: ModelConfig, tcfg: TrainerConfig, mesh,
+                      policy=None):
     """Build ``(state, batch) → (state, metrics)`` for a pod×data×model
-    mesh.  The number of pods is read off the state's worker dim."""
+    mesh.  The number of pods is read off the state's worker dim;
+    ``policy`` defaults to the one ``tcfg.algo`` selects."""
+    if policy is None:
+        policy = tcfg.comm_policy()
 
     def step(state: Dict, batch: Dict) -> Tuple[Dict, Dict]:
         params, lag_state = state["params"], state["lag"]
@@ -71,23 +77,29 @@ def make_pod_lag_step(cfg: ModelConfig, tcfg: TrainerConfig, mesh):
                 lambda p: model.loss_fn(p, cfg, b))(params))(shards)
         loss = jnp.mean(losses)
 
-        # per-pod LAG-WK trigger against the pod's stale gradient
-        comm = jax.vmap(
-            lambda g, gh: lag.wk_communicate(g, gh, lag_state["hist"],
-                                             lagcfg),
-            in_axes=(0, 0))(grads, lag_state["grad_hat"])
+        grad_at_hat = None
+        if policy.needs_grad_at_hat:
+            grad_at_hat = jax.vmap(
+                lambda th, b: jax.grad(
+                    lambda p: model.loss_fn(p, cfg, b))(th),
+                in_axes=(0, 0))(lag_state["theta_hat"], shards)
+
+        # per-pod policy round against the pod's mirror state
+        comm, delta, new_pst = policy_rounds(
+            policy, lagcfg, params, grads, lag_state, grad_at_hat)
         any_comm = jnp.any(comm)
-        delta = masked_delta_tree(comm, grads, lag_state["grad_hat"])
 
         # THE pod-LAG move: the cross-pod reduction only exists on the true
         # branch.  When no pod triggered every delta is exactly zero, so the
-        # false branch returns zeros and the DCI link carries nothing.
+        # false branch returns zeros and the DCI link carries nothing.  The
+        # zeros mirror the summed DELTA's shape/dtype (LAQ payloads are
+        # float32 regardless of param dtype, and cond branches must agree).
         sum_delta = jax.lax.cond(
             any_comm,
             lambda d: jax.tree_util.tree_map(
                 lambda x: jnp.sum(x, axis=0), d),
             lambda d: jax.tree_util.tree_map(
-                lambda p: jnp.zeros(p.shape, p.dtype), params),
+                lambda x: jnp.zeros(x.shape[1:], x.dtype), d),
             delta)
 
         new_params, new_nabla, new_hist = lag.server_update(
@@ -96,19 +108,22 @@ def make_pod_lag_step(cfg: ModelConfig, tcfg: TrainerConfig, mesh):
         comm_i, counters = comm_counter_updates(lag_state, comm)
         new_lag = dict(
             lag_state,
-            grad_hat=apply_delta(lag_state["grad_hat"], delta),
             nabla=new_nabla,
             hist=new_hist,
             rounds_skipped=lag_state["rounds_skipped"]
             + (1 - any_comm.astype(jnp.int32)),
+            **new_pst,
             **counters)
 
         new_state = dict(state, params=new_params, lag=new_lag,
                          step=state["step"] + 1)
+        bytes_per_upload = policy.wire_bytes(params)
         metrics = {
             "loss": loss,
             "comm_this_round": jnp.sum(comm_i),
             "comm_total": new_lag["comm_total"],
+            "wire_bytes_this_round":
+                jnp.sum(comm_i).astype(jnp.float32) * bytes_per_upload,
             "skipped_round": (~any_comm).astype(jnp.int32),
         }
         return new_state, metrics

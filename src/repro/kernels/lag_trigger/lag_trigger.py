@@ -50,6 +50,33 @@ def delta_sqnorm_2d(a: jnp.ndarray, b: jnp.ndarray, *, interpret: bool = True
     )(a, b)[0, 0]
 
 
+def _sqnorm1_kernel(a_ref, out_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[0, 0] = jnp.zeros((), jnp.float32)
+
+    a = a_ref[...].astype(jnp.float32)
+    out_ref[0, 0] += jnp.sum(a * a)
+
+
+def sqnorm_2d(a: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
+    """‖a‖² for a (R, LANES)-shaped operand, R % BLOCK_ROWS == 0 — the
+    single-operand variant of :func:`delta_sqnorm_2d` (one HBM read, the
+    square+reduce never materializes an intermediate)."""
+    R = a.shape[0]
+    grid = (R // BLOCK_ROWS,)
+    return pl.pallas_call(
+        _sqnorm1_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=interpret,
+    )(a)[0, 0]
+
+
 def _update_kernel(a_ref, b_ref, m_ref, out_ref):
     m = m_ref[0, 0]
     a = a_ref[...].astype(jnp.float32)
@@ -72,3 +99,87 @@ def masked_update_2d(a: jnp.ndarray, b: jnp.ndarray, mask: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct(a.shape, b.dtype),
         interpret=interpret,
     )(a, b, mask.reshape(1, 1).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# LAQ encode (quantized lazy uploads — Sun et al., 2019)
+#
+# LAQ's per-round candidate upload is Q_b(v) with v = (∇ − q̂) + e, the
+# gradient innovation with the error-feedback residual folded in.  Naively
+# that is five HBM sweeps (diff, add, absmax, quantize, residual).  Here it
+# is TWO: one absmax pass for the quantizer scale, then one fused pass that
+# streams ∇/q̂/e once and writes the dequantized payload, the new residual
+# AND the trigger LHS ‖Q_b(v)‖² (accumulated in SMEM) in the same sweep.
+# ---------------------------------------------------------------------------
+
+def _absmax_kernel(g_ref, q_ref, e_ref, out_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[0, 0] = jnp.zeros((), jnp.float32)
+
+    v = (g_ref[...].astype(jnp.float32) - q_ref[...].astype(jnp.float32)
+         + e_ref[...].astype(jnp.float32))
+    out_ref[0, 0] = jnp.maximum(out_ref[0, 0], jnp.max(jnp.abs(v)))
+
+
+def innovation_absmax_2d(g: jnp.ndarray, q: jnp.ndarray, e: jnp.ndarray,
+                         *, interpret: bool = True) -> jnp.ndarray:
+    """max|(g − q) + e| for (R, LANES) operands — the LAQ quantizer scale."""
+    R = g.shape[0]
+    grid = (R // BLOCK_ROWS,)
+    return pl.pallas_call(
+        _absmax_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0))] * 3,
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=interpret,
+    )(g, q, e)[0, 0]
+
+
+def _laq_encode_kernel(qmax, g_ref, q_ref, e_ref, s_ref,
+                       p_ref, eout_ref, sq_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        sq_ref[0, 0] = jnp.zeros((), jnp.float32)
+
+    v = (g_ref[...].astype(jnp.float32) - q_ref[...].astype(jnp.float32)
+         + e_ref[...].astype(jnp.float32))
+    step = s_ref[0, 0] / qmax
+    inv = jnp.where(step > 0.0, 1.0 / jnp.where(step > 0.0, step, 1.0), 0.0)
+    codes = jnp.clip(jnp.round(v * inv), -qmax, qmax)
+    p = codes * step
+    p_ref[...] = p
+    eout_ref[...] = v - p
+    sq_ref[0, 0] += jnp.sum(p * p)
+
+
+def laq_encode_2d(g: jnp.ndarray, q: jnp.ndarray, e: jnp.ndarray,
+                  scale: jnp.ndarray, bits: int, *, interpret: bool = True):
+    """Fused b-bit quantize + error-feedback residual + trigger sqnorm.
+
+    One sweep over (R, LANES) operands: returns (payload, new_residual,
+    ‖payload‖²) where payload = Q_b((g − q) + e) dequantized, on the
+    symmetric uniform grid step = scale/(2^{b−1}−1).
+    """
+    R = g.shape[0]
+    grid = (R // BLOCK_ROWS,)
+    qmax = float(2 ** (bits - 1) - 1)
+    p, eout, sq = pl.pallas_call(
+        functools.partial(_laq_encode_kernel, qmax),
+        grid=grid,
+        in_specs=[pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0))] * 3
+        + [pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        out_specs=[pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+                   pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+                   pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct(g.shape, jnp.float32),
+                   jax.ShapeDtypeStruct(g.shape, jnp.float32),
+                   jax.ShapeDtypeStruct((1, 1), jnp.float32)],
+        interpret=interpret,
+    )(g, q, e, scale.reshape(1, 1).astype(jnp.float32))
+    return p, eout, sq[0, 0]

@@ -12,7 +12,10 @@ from repro.kernels import on_tpu
 from repro.kernels.lag_trigger import ref
 from repro.kernels.lag_trigger.lag_trigger import (BLOCK_ROWS, LANES,
                                                    delta_sqnorm_2d,
-                                                   masked_update_2d)
+                                                   innovation_absmax_2d,
+                                                   laq_encode_2d,
+                                                   masked_update_2d,
+                                                   sqnorm_2d)
 
 
 def _to_2d(x: jnp.ndarray) -> jnp.ndarray:
@@ -51,3 +54,54 @@ def masked_lazy_update(g_new, g_old, mask, *, use_ref: bool = False):
         return out2d.reshape(-1)[:a.size].reshape(a.shape).astype(b.dtype)
 
     return jax.tree_util.tree_map(upd, g_new, g_old)
+
+
+@functools.partial(jax.jit, static_argnames=("use_ref",))
+def fused_tree_sqnorm(tree, *, use_ref: bool = False) -> jnp.ndarray:
+    """Σ ‖leaf‖² over a pytree (float32 scalar) via the fused Pallas
+    square+reduce — drop-in for ``repro.core.lag.tree_sqnorm`` through the
+    trigger rules' ``sqnorm_fn`` injection point."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return jnp.zeros((), jnp.float32)
+    if use_ref:
+        return sum(ref.sqnorm(l) for l in leaves)
+    interp = not on_tpu()
+    total = jnp.zeros((), jnp.float32)
+    for l in leaves:
+        total += sqnorm_2d(_to_2d(l), interpret=interp)
+    return total
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "use_ref"))
+def laq_encode(g_new, q_hat, resid, *, bits: int = 4, use_ref: bool = False):
+    """LAQ candidate upload over a pytree: per-leaf b-bit quantization of
+    the error-compensated innovation v = (∇ − q̂) + e.
+
+    Returns (payload, new_residual, lhs_sqnorm): dequantized Q_b(v) tree,
+    the v − Q_b(v) residual tree, and the trigger LHS ‖Q_b(v)‖² summed over
+    leaves.  The Pallas path is one absmax sweep + ONE fused
+    quantize/residual/sqnorm sweep per leaf; ``use_ref`` selects the jnp
+    oracle (what CPU runs by default — XLA fuses it adequately there).
+    """
+    g_leaves, tdef = jax.tree_util.tree_flatten(g_new)
+    q_leaves = jax.tree_util.tree_leaves(q_hat)
+    e_leaves = jax.tree_util.tree_leaves(resid)
+    interp = not on_tpu()
+    ps, es, lhs = [], [], jnp.zeros((), jnp.float32)
+    for g, q, e in zip(g_leaves, q_leaves, e_leaves):
+        if use_ref:
+            scale = ref.innovation_absmax(g, q, e)
+            p, enew, sq = ref.laq_encode(g, q, e, scale, bits)
+        else:
+            g2, q2, e2 = _to_2d(g), _to_2d(q), _to_2d(e)
+            scale = innovation_absmax_2d(g2, q2, e2, interpret=interp)
+            p2, e2n, sq = laq_encode_2d(g2, q2, e2, scale, bits,
+                                        interpret=interp)
+            p = p2.reshape(-1)[:g.size].reshape(g.shape)
+            enew = e2n.reshape(-1)[:g.size].reshape(g.shape)
+        ps.append(p)
+        es.append(enew)
+        lhs += sq
+    return (jax.tree_util.tree_unflatten(tdef, ps),
+            jax.tree_util.tree_unflatten(tdef, es), lhs)

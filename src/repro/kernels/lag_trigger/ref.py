@@ -14,3 +14,34 @@ def masked_lazy_update(g_new, g_old, mask):
     out = g_old.astype(jnp.float32) + m * (g_new.astype(jnp.float32)
                                            - g_old.astype(jnp.float32))
     return out.astype(g_old.dtype)
+
+
+def sqnorm(a: jnp.ndarray) -> jnp.ndarray:
+    """‖a‖² in float32 (flattened over all dims)."""
+    a32 = a.astype(jnp.float32)
+    return jnp.sum(a32 * a32)
+
+
+def innovation_absmax(g, q, e) -> jnp.ndarray:
+    """max|(g − q) + e| in float32 — the LAQ quantizer scale."""
+    v = (g.astype(jnp.float32) - q.astype(jnp.float32)
+         + e.astype(jnp.float32))
+    return jnp.max(jnp.abs(v))
+
+
+def laq_encode(g, q, e, scale, bits: int):
+    """b-bit symmetric uniform quantization of the error-compensated
+    innovation v = (g − q) + e on the grid step = scale/(2^{b−1}−1).
+
+    Returns (payload, new_residual, ‖payload‖²): payload is the dequantized
+    Q_b(v), new_residual = v − Q_b(v) (the error feedback LAQ folds into the
+    next round's innovation).  scale == 0 (v ≡ 0) quantizes to zeros.
+    """
+    qmax = float(2 ** (bits - 1) - 1)
+    v = (g.astype(jnp.float32) - q.astype(jnp.float32)
+         + e.astype(jnp.float32))
+    step = scale.astype(jnp.float32) / qmax
+    inv = jnp.where(step > 0.0, 1.0 / jnp.where(step > 0.0, step, 1.0), 0.0)
+    codes = jnp.clip(jnp.round(v * inv), -qmax, qmax)
+    p = codes * step
+    return p, v - p, jnp.sum(p * p)

@@ -18,8 +18,8 @@ from repro import metrics as metrics_lib
 from repro.checkpoint import save, restore, latest_step
 from repro.configs import get_config
 from repro.data import TokenStream, make_inputs
-from repro.dist import (TrainerConfig, init_state, make_train_step,
-                        tree_shardings, batch_shardings)
+from repro.dist import (TrainerConfig, init_state, lag_trainer,
+                        make_train_step, tree_shardings, batch_shardings)
 from repro.launch.mesh import (make_host_mesh, make_production_mesh,
                                mesh_context)
 
@@ -28,7 +28,7 @@ def build_argparser():
     p = argparse.ArgumentParser(description="LAG distributed trainer")
     p.add_argument("--arch", default="llama3.2-1b")
     p.add_argument("--algo", default="lag-wk",
-                   choices=["gd", "lag-wk", "lag-ps", "adam", "lag-adam"])
+                   choices=list(lag_trainer.ALGOS))
     p.add_argument("--steps", type=int, default=100)
     p.add_argument("--batch", type=int, default=32)
     p.add_argument("--seq", type=int, default=256)

@@ -2,10 +2,13 @@
 Adam/AdamW, global-norm clipping, LR schedules.  Functional: an Optimizer
 is (init_fn, update_fn) over pytrees; state shards like params.
 
-LAG interposes *before* the optimizer: the paper's method replaces the
-aggregated gradient with the lazily aggregated ∇^k (eq. 4).  The
-paper-faithful trainer uses plain SGD (θ ← θ − α∇^k); ``lag_adam`` in the
-trainer is a beyond-paper combination (noted in EXPERIMENTS.md).
+The ``repro.comm`` policy layer interposes *before* the optimizer: every
+policy (LAG, LAQ, LASG-WK, …) replaces the aggregated gradient with its
+lazily aggregated ∇^k (eq. 4) and the optimizer consumes the mean
+aggregate unchanged.  The paper-faithful trainer uses plain SGD
+(θ ← θ − α∇^k); ``lag_adam`` in the trainer is a beyond-paper combination
+with a known trigger pathology under preconditioning (EXPERIMENTS.md
+§Repro "LAG inside the deep trainer").
 """
 from __future__ import annotations
 

@@ -1,0 +1,292 @@
+"""The ``repro.comm`` policy layer: protocol invariants, refactor
+equivalence against the recorded pre-refactor trainer trajectory, LAQ
+quantization/byte accounting, LASG-WK's full-batch degeneration."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import comm
+from repro.core import convex, lag, simulate
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "lag_wk_50step.json")
+
+
+# ---------------------------------------------------------------------------
+# Protocol invariants (simulate-scale, fast)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def prob():
+    return convex.synthetic("linreg", num_workers=6, n_per=16, d=12, seed=3)
+
+
+POLICY_ALGOS = ["gd", "lag-wk", "lag-ps", "laq", "lasg-wk"]
+
+
+@pytest.mark.parametrize("algo", POLICY_ALGOS)
+def test_nabla_tracks_grad_hat_sum(prob, algo):
+    """decode's contract: Σ_m ĝ_m == ∇^k for every policy (eq. 4 never
+    drifts, quantized or not)."""
+    M, d = prob.num_workers, prob.dim
+    policy = comm.make_policy(algo, bits=6)
+    cfg = lag.LAGConfig(num_workers=M, alpha=1.0 / prob.L, D=5, xi=0.2,
+                        rule="ps" if algo == "lag-ps" else "wk")
+    theta = jnp.zeros((d,), prob.X.dtype)
+    g0 = prob.worker_grads(theta)
+    pst = policy.init_state(g0, jnp.broadcast_to(theta, (M, d))
+                            if policy.needs_theta_hat else None)
+    nabla = jnp.sum(g0, axis=0)
+    hist = lag.hist_init(5)
+    for k in range(8):
+        g = prob.worker_grads(theta)
+        gah = prob.worker_grads_at(pst["theta_hat"]) \
+            if policy.needs_grad_at_hat else g
+
+        def one(gm, pm, gahm, lm):
+            ctx = comm.CommRound(theta=theta, grad_new=gm, hist=hist,
+                                 cfg=cfg, L_m=lm, grad_at_hat=gahm)
+            return comm.run_round(policy, ctx, pm)
+
+        _, delta, pst = jax.vmap(one)(g, pst, gah, prob.L_m)
+        theta, nabla, hist = lag.server_update(
+            theta, nabla, jnp.sum(delta, axis=0), hist, cfg)
+        np.testing.assert_allclose(np.asarray(nabla),
+                                   np.asarray(jnp.sum(pst["grad_hat"], 0)),
+                                   rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("algo", POLICY_ALGOS)
+def test_xi_zero_reproduces_gd(prob, algo):
+    """ξ = 0 makes the trigger RHS 0, so every policy uploads whenever its
+    candidate is nonzero and the trajectory is GD's.  LAQ transmits a
+    quantized payload, so its ξ=0 trajectory is quantized GD — error
+    feedback keeps it within quantization noise of the exact one."""
+    r_gd = simulate.run(prob, "gd", K=40)
+    kw = {"bits": 16} if algo == "laq" else {}
+    r = simulate.run(prob, algo, K=40, xi=0.0, **kw)
+    tol = 1e-3 if algo == "laq" else 1e-5
+    np.testing.assert_allclose(r.losses, r_gd.losses, rtol=tol)
+
+
+def test_lasg_wk_full_batch_equals_lag_wk(prob):
+    """With full-batch gradients ∇L_m(θ̂_m) ≡ ĝ_m, so the correlated
+    stochastic trigger degenerates EXACTLY to 15a."""
+    r_wk = simulate.run(prob, "lag-wk", K=60)
+    r_lasg = simulate.run(prob, "lasg-wk", K=60)
+    np.testing.assert_array_equal(r_lasg.comm_mask, r_wk.comm_mask)
+    np.testing.assert_allclose(r_lasg.losses, r_wk.losses, rtol=1e-6)
+
+
+def test_simulate_policy_object_override(prob):
+    """run() accepts a raw CommPolicy, not just an algo name."""
+    r_name = simulate.run(prob, "laq", K=30, bits=6)
+    r_obj = simulate.run(prob, "laq", K=30,
+                         policy=comm.LAQPolicy(bits=6))
+    np.testing.assert_allclose(r_obj.losses, r_name.losses, rtol=1e-6)
+    assert r_obj.bytes_per_upload == r_name.bytes_per_upload
+
+
+# ---------------------------------------------------------------------------
+# LAQ quantizer + byte accounting
+# ---------------------------------------------------------------------------
+
+def test_laq_quantization_error_bound():
+    """|v − Q_b(v)| ≤ step/2 = max|v| / (2^b − 2) elementwise."""
+    from repro.kernels.lag_trigger import ref
+    v = jax.random.normal(jax.random.PRNGKey(0), (500,)) * 3.0
+    z = jnp.zeros_like(v)
+    for bits in (2, 4, 8):
+        scale = ref.innovation_absmax(v, z, z)
+        p, e, sq = ref.laq_encode(v, z, z, scale, bits)
+        step = float(scale) / (2 ** (bits - 1) - 1)
+        assert float(jnp.max(jnp.abs(e))) <= step / 2 + 1e-6
+        np.testing.assert_allclose(np.asarray(p + e), np.asarray(v),
+                                   rtol=1e-6)
+        np.testing.assert_allclose(float(sq), float(jnp.sum(p * p)),
+                                   rtol=1e-5)
+
+
+def test_laq_zero_innovation_quantizes_to_zero():
+    from repro.kernels.lag_trigger import ref
+    z = jnp.zeros((64,))
+    p, e, sq = ref.laq_encode(z, z, z, ref.innovation_absmax(z, z, z), 4)
+    assert float(jnp.max(jnp.abs(p))) == 0.0
+    assert float(sq) == 0.0
+
+
+def test_laq_wire_bytes_ratio():
+    """4-bit payload ≈ 1/8 of the float32 dense upload (+ tiny per-leaf
+    scale overhead)."""
+    tree = {"a": jnp.zeros((1000,)), "b": jnp.zeros((24, 24))}
+    dense = comm.LAGWKPolicy().wire_bytes(tree)
+    laq4 = comm.LAQPolicy(bits=4).wire_bytes(tree)
+    assert dense == (1000 + 576) * 4
+    assert laq4 == (1000 + 576) * 0.5 + 2 * 4
+    assert laq4 < dense / 7.5
+    with pytest.raises(ValueError):
+        comm.LAQPolicy(bits=1)
+
+
+def test_laq_error_feedback_carries_residual(prob):
+    """Skipped-round innovations are not lost: LAQ with aggressive skipping
+    still converges to the same accuracy as LAG (residual + q̂ drift
+    re-enter the trigger LHS)."""
+    _, opt = prob.optimum()
+    r_wk = simulate.run(prob, "lag-wk", K=800, opt_loss=opt)
+    r_laq = simulate.run(prob, "laq", K=800, opt_loss=opt, bits=4)
+    eps = 1e-6
+    assert r_laq.iters_to(eps) is not None
+    assert r_wk.iters_to(eps) is not None
+    # the headline LAQ claim: fewer wire BYTES to target accuracy
+    assert r_laq.bytes_to(eps) < 0.5 * r_wk.bytes_to(eps), \
+        (r_laq.bytes_to(eps), r_wk.bytes_to(eps))
+
+
+def test_laq_pallas_encode_matches_ref():
+    from repro.kernels.lag_trigger import ops
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(7), 3)
+    g = {"w": jax.random.normal(k1, (300, 40)),
+         "b": jax.random.normal(k2, (17,))}
+    q = jax.tree_util.tree_map(lambda x: 0.25 * x, g)
+    e = jax.tree_util.tree_map(
+        lambda x: 0.01 * jax.random.normal(k3, x.shape), g)
+    p1, e1, s1 = ops.laq_encode(g, q, e, bits=4, use_ref=True)
+    p2, e2, s2 = ops.laq_encode(g, q, e, bits=4, use_ref=False)
+    for a, b in zip(jax.tree_util.tree_leaves((p1, e1)),
+                    jax.tree_util.tree_leaves((p2, e2))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(float(s1), float(s2), rtol=1e-5)
+
+
+def test_fused_tree_sqnorm_matches_tree_sqnorm():
+    """The Pallas fused single-operand sqnorm — the sqnorm_fn injection
+    point's accelerated implementation — against the jnp oracle."""
+    from repro.kernels.lag_trigger import ops
+    tree = {"x": jax.random.normal(jax.random.PRNGKey(0), (257, 33)),
+            "y": {"z": jax.random.normal(jax.random.PRNGKey(1), (1000,),
+                                         jnp.bfloat16)}}
+    want = float(lag.tree_sqnorm(tree))
+    got_pallas = float(ops.fused_tree_sqnorm(tree))
+    got_ref = float(ops.fused_tree_sqnorm(tree, use_ref=True))
+    np.testing.assert_allclose(got_pallas, want, rtol=2e-5)
+    np.testing.assert_allclose(got_ref, want, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Refactor equivalence: the policy-layer trainer vs the recorded
+# pre-refactor trajectory (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def trainer_setup():
+    from repro.configs import get_config
+    from repro.data import TokenStream, make_heterogeneous_inputs
+    cfg = get_config("llama3.2-1b").reduced()
+    stream = TokenStream(vocab=cfg.vocab_size, seed=0)
+    batch = make_heterogeneous_inputs(cfg, stream, 0, 4, 8, 64)
+    return cfg, batch
+
+
+def test_lag_wk_matches_pre_refactor_golden(trainer_setup):
+    """50 lag-wk steps through ``repro.comm`` reproduce the trajectory
+    recorded from the pre-policy-layer trainer (same config, same seed):
+    allclose losses AND identical per-worker upload counts."""
+    from repro.dist import TrainerConfig, init_state, make_train_step
+    gold = json.load(open(GOLDEN))
+    cfg, batch = trainer_setup
+    tcfg = TrainerConfig(algo="lag-wk", num_workers=4, lr=0.05)
+    state = init_state(jax.random.PRNGKey(0), cfg, tcfg)
+    step = jax.jit(make_train_step(cfg, tcfg))
+    losses, rounds = [], []
+    for _ in range(50):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+        rounds.append(int(m["comm_this_round"]))
+    np.testing.assert_allclose(losses, gold["losses"], rtol=1e-4)
+    assert rounds == gold["comm_this_round"]
+    assert np.asarray(jax.device_get(
+        state["lag"]["comm_per_worker"])).tolist() == gold["comm_per_worker"]
+    assert int(jax.device_get(state["lag"]["comm_total"])) \
+        == gold["comm_total"]
+
+
+def test_trainer_laq_descends_with_fewer_bytes(trainer_setup):
+    """algo="laq" in the deep trainer: loss descends like lag-wk while the
+    policy-declared wire bytes are ~8× smaller per upload."""
+    from repro.dist import TrainerConfig, init_state, make_train_step
+
+    def run(algo, steps=20):
+        tcfg = TrainerConfig(algo=algo, num_workers=4, lr=0.05)
+        state = init_state(jax.random.PRNGKey(0), cfg, tcfg)
+        step = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0,))
+        for _ in range(steps):
+            state, m = step(state, batch)
+        return state, m
+
+    cfg, batch = trainer_setup
+    s_wk, m_wk = run("lag-wk")
+    s_laq, m_laq = run("laq")
+    assert np.isfinite(float(m_laq["loss"]))
+    assert float(m_laq["loss"]) < 1.15 * float(m_wk["loss"])
+    assert "resid" in s_laq["lag"]
+    up_wk = int(jax.device_get(s_wk["lag"]["comm_total"]))
+    up_laq = int(jax.device_get(s_laq["lag"]["comm_total"]))
+    bytes_wk = float(m_wk["wire_bytes_total"])
+    bytes_laq = float(m_laq["wire_bytes_total"])
+    # per-upload ratio is the point: ~b/32 with per-leaf scale overhead
+    assert bytes_laq / up_laq < 0.17 * (bytes_wk / up_wk)
+
+
+def test_trainer_lasg_wk_runs_and_skips(trainer_setup):
+    from repro.dist import TrainerConfig, init_state, make_train_step
+    cfg, batch = trainer_setup
+    tcfg = TrainerConfig(algo="lasg-wk", num_workers=4, lr=0.05)
+    state = init_state(jax.random.PRNGKey(0), cfg, tcfg)
+    step = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0,))
+    first = None
+    for _ in range(20):
+        state, m = step(state, batch)
+        first = first if first is not None else float(m["loss"])
+    assert float(m["loss"]) < first
+    assert "theta_hat" in state["lag"]
+    assert int(jax.device_get(state["lag"]["comm_total"])) <= 20 * 4
+
+
+def test_trainer_pallas_comm_flag_parity(trainer_setup):
+    """use_pallas_comm=True routes the trigger through the fused Pallas
+    sqnorm (interpret mode on CPU) — same uploads, same losses."""
+    from repro.dist import TrainerConfig, init_state, make_train_step
+    cfg, batch = trainer_setup
+
+    def run(flag):
+        tcfg = TrainerConfig(algo="lag-wk", num_workers=4, lr=0.05,
+                             use_pallas_comm=flag)
+        state = init_state(jax.random.PRNGKey(0), cfg, tcfg)
+        step = jax.jit(make_train_step(cfg, tcfg))
+        out = []
+        for _ in range(3):
+            state, m = step(state, batch)
+            out.append((float(m["loss"]), int(m["comm_this_round"])))
+        return out
+
+    ref, pal = run(False), run(True)
+    assert [c for _, c in ref] == [c for _, c in pal]
+    np.testing.assert_allclose([l for l, _ in ref], [l for l, _ in pal],
+                               rtol=1e-5)
+
+
+def test_hlo_logical_upload_bytes():
+    from repro.dist import hlo_analysis
+    tree = {"w": jnp.zeros((100,))}
+    laq = comm.LAQPolicy(bits=4)
+    assert hlo_analysis.logical_upload_bytes(laq, tree, uploads=3) \
+        == 3 * (100 * 0.5 + 4)
+    rep = hlo_analysis.policy_traffic_summary(
+        hlo_analysis.collective_bytes(""), laq, tree, uploads=2)
+    assert rep["policy"] == "laq" and rep["logical_upload_bytes"] == 108.0

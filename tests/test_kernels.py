@@ -38,6 +38,35 @@ def test_lag_trigger_pytree():
     np.testing.assert_allclose(got, 33 + 4 * 5 * 4.0, rtol=1e-6)
 
 
+@pytest.mark.parametrize("shape", [(64,), (1000,), (257, 33)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_fused_tree_sqnorm_shapes(shape, dtype):
+    a = jax.random.normal(jax.random.PRNGKey(2), shape, dtype)
+    np.testing.assert_allclose(lag_ops.fused_tree_sqnorm(a),
+                               lag_ref.sqnorm(a), rtol=2e-5)
+
+
+@pytest.mark.parametrize("shape", [(64,), (1000,), (257, 33)])
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_laq_encode_pallas_vs_ref(shape, bits):
+    """The fused quantize+residual+sqnorm kernel against the jnp oracle,
+    across shapes that exercise the (rows, 128) padding path."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    g = jax.random.normal(k1, shape)
+    q = 0.25 * jax.random.normal(k2, shape)
+    e = 0.01 * jax.random.normal(k3, shape)
+    p_r, e_r, s_r = lag_ops.laq_encode(g, q, e, bits=bits, use_ref=True)
+    p_k, e_k, s_k = lag_ops.laq_encode(g, q, e, bits=bits, use_ref=False)
+    np.testing.assert_allclose(np.asarray(p_k), np.asarray(p_r),
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(e_k), np.asarray(e_r),
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(float(s_k), float(s_r), rtol=1e-5)
+    # reconstruction identity of the symmetric uniform quantizer
+    np.testing.assert_allclose(np.asarray(p_r + e_r),
+                               np.asarray(g - q + e), rtol=1e-5, atol=1e-6)
+
+
 ATTN_CASES = [
     dict(B=2, S=128, H=4, KV=2, hd=32, causal=True, window=None),
     dict(B=1, S=200, H=2, KV=1, hd=64, causal=True, window=None),   # GQA+pad

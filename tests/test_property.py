@@ -72,6 +72,20 @@ def test_xi_zero_equals_gd(prob):
                                rtol=1e-4, atol=1e-6)
 
 
+@given(problems(), st.sampled_from(simulate.POLICY_ALGOS))
+def test_every_policy_xi_zero_equals_gd(prob, algo):
+    """ξ = 0 zeroes the trigger RHS, so EVERY ``repro.comm`` policy uploads
+    whenever its candidate is nonzero and walks the GD trajectory.  LAQ
+    transmits a quantized payload, so its ξ=0 run is quantized GD — at 16
+    bits with error feedback it must track GD to within quantization noise;
+    the dense policies must match to float tolerance."""
+    r_gd = simulate.run(prob, "gd", K=30)
+    kw = {"bits": 16} if algo == "laq" else {}
+    r = simulate.run(prob, algo, K=30, xi=0.0, **kw)
+    tol = 1e-2 if algo == "laq" else 1e-4
+    np.testing.assert_allclose(r.losses, r_gd.losses, rtol=tol, atol=1e-5)
+
+
 @given(problems())
 def test_losses_bounded_and_decreasing_envelope(prob):
     """LAG with paper stepsize never diverges on smooth convex problems."""
