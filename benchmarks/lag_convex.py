@@ -193,6 +193,60 @@ ALL_BENCHES = [fig3_linreg_increasing, fig4_logreg_uniform, fig5_linreg_real,
                policy_comparison]
 
 
+def engine_scenarios(K: int = 1500):
+    """Beyond-paper combinations the ``repro.engine`` redesign makes
+    one-config (EXPERIMENTS.md §Engine scenarios): LAG-Adam in the convex
+    sim, scheduled LAQ, and prox-LAG — all through the ``Experiment``
+    front door."""
+    from repro.engine import Experiment
+    prob = convex.synthetic("linreg", num_workers=9, seed=0,
+                            dtype=jnp.float64)
+    _, opt = prob.optimum()
+    rows, claims = [], []
+    runs = {
+        "lag-wk": Experiment(problem=prob, algo="lag-wk", steps=K,
+                             opt_loss=opt),
+        "lag-adam": Experiment(problem=prob, algo="lag-wk", server="adam",
+                               steps=K, opt_loss=opt),
+        "cyc-laq@4": Experiment(problem=prob, algo="cyc-laq@4", steps=K,
+                                opt_loss=opt),
+        "prox-lag": Experiment(problem=prob, algo="lag-wk", l1=5.0,
+                               steps=K),
+    }
+    res = {}
+    for name, exp in runs.items():
+        t0 = time.time()
+        r = exp.run()
+        res[name] = r
+        row = r.summary(eps=EPS)
+        rows.append({
+            "name": f"engine/{name}",
+            "us_per_call": round((time.time() - t0) / K * 1e6, 2),
+            "derived": f"iters={row['iters_to_eps']};"
+                       f"comms={row['comms_to_eps']};"
+                       f"bytes={row['bytes_to_eps']};server={r.server}",
+        })
+    claims.append(("engine: lag-adam (convex) converges to 1e-4",
+                   res["lag-adam"].iters_to(1e-4) is not None,
+                   f"iters={res['lag-adam'].iters_to(1e-4)}"))
+    claims.append(("engine: lag-adam uploads < adam-equivalent GD uploads",
+                   res["lag-adam"].total_comms < K * prob.num_workers,
+                   f"{res['lag-adam'].total_comms} vs {K * prob.num_workers}"))
+    claims.append(("engine: cyc-laq is one b-bit upload per round",
+                   (res["cyc-laq@4"].comms_per_iter <= 1).all()
+                   and res["cyc-laq@4"].bytes_per_upload
+                   < 0.25 * res["lag-wk"].bytes_per_upload,
+                   f"bpu={res['cyc-laq@4'].bytes_per_upload}"))
+    claims.append(("engine: prox-LAG composite objective decreases",
+                   res["prox-lag"].losses[-1] < res["prox-lag"].losses[0],
+                   f"{res['prox-lag'].losses[0]:.3f} → "
+                   f"{res['prox-lag'].losses[-1]:.3f}"))
+    return rows, claims
+
+
+ALL_BENCHES.append(engine_scenarios)
+
+
 
 def prox_lasso(K: int = 5000):
     """Beyond-paper: PROXIMAL LAG (the extension flagged in the paper's

@@ -46,6 +46,8 @@ def main(argv=None) -> int:
             K=1500 if args.quick else 3000)),
         ("policy_cmp", lambda: lag_convex.policy_comparison(
             K=1500 if args.quick else 3000)),
+        ("engine", lambda: lag_convex.engine_scenarios(
+            K=800 if args.quick else 1500)),
     ]
     for name, fn in suites:
         try:

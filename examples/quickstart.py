@@ -6,7 +6,13 @@ Reproduces the headline result: LAG-WK matches batch GD's iteration count
 while cutting worker→server uploads by an order of magnitude when the
 workers' smoothness constants are heterogeneous (paper Fig. 3 / Table 5).
 
-Next step: the same algorithm inside a real sharded deep trainer —
+Everything goes through the ``repro.engine`` front door: an
+``Experiment`` is any policy (``algo=``) × server optimizer
+(``server=``) × topology — the IAG baselines are schedule policies, and
+beyond-paper combinations like LAG-Adam (``server="adam"``) or proximal
+LAG (``server="prox-l1@5.0"``) are one keyword away.
+
+Next step: the same algorithms inside a real sharded deep trainer —
 ``examples/train_lag_llm.py`` (and ``examples/pod_lag_multipod.py`` for
 the pod-level variant that skips the cross-pod collective).
 """
@@ -14,21 +20,28 @@ import jax
 jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp
 
-from repro.core import synthetic, run
+from repro.core import synthetic
+from repro.engine import Experiment
 
 # 9 workers, increasing smoothness L_m = (1.3^{m-1}+1)² — the paper's setup
 problem = synthetic("linreg", num_workers=9, seed=0, dtype=jnp.float64)
 print(f"worker smoothness L_m: {[round(float(l), 1) for l in problem.L_m]}")
 
 EPS = 1e-8
+results = {}
 for algo in ("gd", "lag-wk", "lag-ps", "cyc-iag", "num-iag"):
-    r = run(problem, algo, K=3000)
+    r = results[algo] = Experiment(problem=problem, algo=algo,
+                                   steps=3000).run()
     iters, comms = r.iters_to(EPS), r.comms_to(EPS)
     print(f"{algo:8s}  iterations to 1e-8: {str(iters):>6s}   "
           f"uploads to 1e-8: {str(comms):>6s}")
 
-r = run(problem, "lag-wk", K=500)
-uploads = r.comm_mask.sum(0)
-print("\nLemma 4 in action — uploads per worker over 500 rounds "
+print("\nLemma 4 in action — uploads per worker over the first 500 rounds "
       "(L_m increasing left to right):")
-print("  " + " ".join(f"{int(u):4d}" for u in uploads))
+print("  " + " ".join(f"{int(u):4d}"
+                      for u in results["lag-wk"].comm_mask[:500].sum(0)))
+
+# LAQ: same trigger, b-bit quantized uploads — savings show up in BYTES
+r_laq = Experiment(problem=problem, algo="laq@4", steps=3000).run()
+print(f"\nwire bytes to 1e-8:  lag-wk {results['lag-wk'].bytes_to(EPS):>9.0f}"
+      f"   laq@4 {r_laq.bytes_to(EPS):>9.0f}")

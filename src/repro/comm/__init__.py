@@ -4,25 +4,35 @@ learning.
 One protocol (``CommPolicy``: ``init_state`` / ``should_upload`` /
 ``encode`` / ``decode`` / ``wire_bytes``) behind every driver in the repo:
 
-  GDPolicy      always-upload synchronous baseline
-  LAGWKPolicy   LAG worker-side trigger (15a)          [Chen et al. 2018]
-  LAGPSPolicy   LAG server-side trigger (15b)          [Chen et al. 2018]
-  LAQPolicy     b-bit quantized lazy uploads with
-                error feedback                         [Sun et al. 2019]
-  LASGWKPolicy  stochastic worker trigger              [Chen et al. 2020]
+  GDPolicy         always-upload synchronous baseline
+  LAGWKPolicy      LAG worker-side trigger (15a)          [Chen et al. 2018]
+  LAGPSPolicy      LAG server-side trigger (15b)          [Chen et al. 2018]
+  LAQPolicy        b-bit quantized lazy uploads with
+                   error feedback                         [Sun et al. 2019]
+  LASGWKPolicy     stochastic worker trigger              [Chen et al. 2020]
+  ScheduledPolicy  ANY payload under a cyclic/sampled
+                   schedule (cyc-IAG, num-IAG, cyc-LAQ …)
 
 Drivers (``repro.core.simulate.run``, ``repro.dist.lag_trainer``,
-``repro.dist.pod_lag``) take a policy object or build one from an algo
-name via :func:`make_policy`.
+``repro.dist.pod_lag``) and the ``repro.engine`` experiment layer take a
+policy object or build one from a SPEC STRING via :func:`make_policy`:
+
+    make_policy("lag-wk")       # the 15a trigger
+    make_policy("laq@8")        # LAQ at 8 bits
+    make_policy("cyc-iag")      # cyclic IAG (scheduled GD payload)
+    make_policy("num-iag")      # importance-sampled IAG (pass probs=)
+    make_policy("cyc-laq@8")    # cyclic schedule over the LAQ payload
 """
 from repro.comm.base import CommPolicy, CommRound, PolicyState, run_round
 from repro.comm.laq import LAQPolicy
 from repro.comm.policies import (GDPolicy, LAGPSPolicy, LAGWKPolicy,
                                  LASGWKPolicy)
+from repro.comm.schedule import (CyclicSchedule, SampledSchedule, Schedule,
+                                 ScheduledPolicy)
 
 # algo name → policy class; trainer-only aliases (adam server steps) reuse
-# the matching trigger policy — the server optimizer is the DRIVER's switch,
-# communication is the policy's.
+# the matching trigger policy — the server optimizer is the ENGINE's axis
+# (repro.engine.server), communication is the policy's.
 POLICIES = {
     "gd": GDPolicy,
     "lag-wk": LAGWKPolicy,
@@ -33,29 +43,93 @@ POLICIES = {
     "lag-adam": LAGWKPolicy,
 }
 
+# schedule prefix → Schedule factory (probs only reaches sampled schedules)
+SCHEDULES = {
+    "cyc": lambda probs: CyclicSchedule(),
+    "num": lambda probs: SampledSchedule(probs),
+}
 
-def make_policy(algo: str, *, bits: int = 4, use_pallas: bool = False,
-                sqnorm_fn=None) -> CommPolicy:
-    """Build the ``CommPolicy`` for an algo name.
 
-    ``bits``/``use_pallas`` only reach LAQ; ``sqnorm_fn`` (e.g. the Pallas
-    fused ``repro.kernels.lag_trigger.ops.fused_tree_sqnorm``) reaches every
+def _parse_spec(spec: str):
+    """``"name@param"`` → (name, param-str-or-None).  Pure string split —
+    numeric validation happens per policy so messages stay actionable."""
+    if not isinstance(spec, str) or not spec:
+        raise ValueError(f"policy spec must be a non-empty string, got "
+                         f"{spec!r}")
+    name, sep, param = spec.partition("@")
+    return name.strip(), (param.strip() if sep else None)
+
+
+def make_policy(spec: str, *, bits: int = 4, use_pallas: bool = False,
+                sqnorm_fn=None, probs=None) -> CommPolicy:
+    """Build a ``CommPolicy`` from a spec string.
+
+    Grammar: ``[cyc-|num-]<algo>[@<bits>]``.
+
+      * ``<algo>`` — a registered policy name (``gd``, ``lag-wk``,
+        ``lag-ps``, ``laq``, ``lasg-wk``; ``iag`` aliases the GD payload
+        and only makes sense under a schedule prefix).
+      * ``@<bits>`` — LAQ quantization width, overriding the ``bits``
+        kwarg (``"laq@8"``).
+      * ``cyc-``/``num-`` — wrap the payload in a ``ScheduledPolicy``
+        with a cyclic / sampled schedule (``"cyc-iag"``, ``"num-iag"``,
+        ``"cyc-laq@8"``).  ``probs`` feeds the sampled schedule
+        (num-IAG's p ∝ L_m); uniform when omitted.
+
+    ``use_pallas`` only reaches LAQ; ``sqnorm_fn`` (e.g. the Pallas fused
+    ``repro.kernels.lag_trigger.ops.fused_tree_sqnorm``) reaches every
     trigger's LHS.
     """
-    if algo not in POLICIES:
-        raise ValueError(f"unknown comm policy {algo!r}; known: "
-                         f"{tuple(POLICIES)}")
-    cls = POLICIES[algo]
+    name, param = _parse_spec(spec)
+
+    schedule = None
+    for prefix, sched_fn in SCHEDULES.items():
+        if name.startswith(prefix + "-"):
+            schedule = sched_fn(probs)
+            name = name[len(prefix) + 1:]
+            break
+    if schedule is not None and name == "iag":
+        name = "gd"   # IAG = the dense GD payload under a schedule
+    elif name == "iag" or name.endswith("-iag"):
+        raise ValueError(
+            f"unknown comm policy {spec!r}: IAG baselines are spelled "
+            f"'cyc-iag' or 'num-iag' (a schedule prefix over the GD "
+            f"payload)")
+
+    if name not in POLICIES:
+        raise ValueError(
+            f"unknown comm policy {spec!r}; known algos: "
+            f"{tuple(POLICIES)}, optionally prefixed with "
+            f"{tuple(p + '-' for p in SCHEDULES)} and suffixed with "
+            f"'@<bits>' for laq")
+    cls = POLICIES[name]
+
+    if param is not None:
+        if cls is not LAQPolicy:
+            raise ValueError(
+                f"bad policy spec {spec!r}: only 'laq' takes an '@<bits>' "
+                f"parameter ({name!r} has no spec parameter)")
+        try:
+            bits = int(param)
+        except ValueError:
+            raise ValueError(
+                f"bad policy spec {spec!r}: '@{param}' is not an integer "
+                f"bit width (want e.g. 'laq@8')") from None
+
     kw = {}
     if sqnorm_fn is not None:
         kw["sqnorm_fn"] = sqnorm_fn
     if cls is LAQPolicy:
         kw.update(bits=bits, use_pallas=use_pallas)
-    return cls(**kw)
+    policy = cls(**kw)
+    if schedule is not None:
+        policy = ScheduledPolicy(policy, schedule)
+    return policy
 
 
 __all__ = [
     "CommPolicy", "CommRound", "PolicyState", "run_round", "make_policy",
-    "POLICIES", "GDPolicy", "LAGWKPolicy", "LAGPSPolicy", "LAQPolicy",
-    "LASGWKPolicy",
+    "POLICIES", "SCHEDULES", "GDPolicy", "LAGWKPolicy", "LAGPSPolicy",
+    "LAQPolicy", "LASGWKPolicy", "Schedule", "CyclicSchedule",
+    "SampledSchedule", "ScheduledPolicy",
 ]

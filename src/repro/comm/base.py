@@ -13,11 +13,14 @@ into the same per-worker round:
                         advance the worker's mirror state
   4. ``wire_bytes``     what one triggered upload actually costs on the wire
 
-``CommPolicy`` owns all four (plus ``init_state``); the drivers —
-``repro.core.simulate.run``, ``repro.dist.lag_trainer.make_train_step`` and
-``repro.dist.pod_lag.make_pod_lag_step`` — own batching, vmapping over
-workers/pods, the server update (eq. 4) and the iterate-lag history, and
-consume any policy through :func:`run_round`.
+``CommPolicy`` owns all four (plus ``init_state``).  The shared round —
+vmapping over workers/pods, the pluggable server update, the iterate-lag
+history, metrics — is ``repro.engine.rounds.lag_round``, which consumes
+any policy through :func:`run_round`; batching/placement is the
+``repro.engine.topology`` backends', and the old drivers
+(``repro.core.simulate.run``, ``repro.dist.lag_trainer``,
+``repro.dist.pod_lag``) are thin consumers.  Schedule-driven baselines
+(cyc-IAG, num-IAG) are policies too: ``repro.comm.schedule``.
 
 Everything is functional and shape-polymorphic: policy state is a flat dict
 of pytrees (one leading worker dim added by the driver, stripped by vmap
@@ -58,6 +61,10 @@ class CommRound:
     cfg: lag.LAGConfig                   # α, M, D, ξ — the trigger constants
     L_m: Optional[jnp.ndarray] = None    # per-worker smoothness (PS rule only)
     grad_at_hat: Optional[Pytree] = None  # ∇ℓ_m(θ̂_m; current sample) (LASG-WK)
+    k: Optional[jnp.ndarray] = None      # () int round index (schedules)
+    worker_id: Optional[jnp.ndarray] = None  # () int slot in the worker dim
+    key: Optional[jnp.ndarray] = None    # per-round PRNG key, broadcast to
+    #                                      every worker (stochastic schedules)
 
 
 # ---------------------------------------------------------------------------
@@ -78,12 +85,15 @@ class CommPolicy:
       ``needs_L_m``          driver supplies per-worker smoothness in ctx
       ``needs_grad_at_hat``  driver evaluates ∇ℓ_m(θ̂_m) on the CURRENT
                              sample (second vmapped backward pass)
+      ``needs_rng``          driver splits a fresh per-round PRNG key into
+                             ``ctx.key`` (stochastic schedules)
     """
     name: str = "base"
     state_keys: Tuple[str, ...] = ("grad_hat",)
     needs_theta_hat: bool = False
     needs_L_m: bool = False
     needs_grad_at_hat: bool = False
+    needs_rng: bool = False
 
     def __init__(self, sqnorm_fn: Callable[[Pytree], jnp.ndarray] = lag.tree_sqnorm):
         # injectable so drivers can supply a model-axis-psum'd or
@@ -155,20 +165,16 @@ class CommPolicy:
 # Driver entry point
 # ---------------------------------------------------------------------------
 
-def run_round(policy: CommPolicy, ctx: CommRound, st: PolicyState,
-              comm_override: Optional[jnp.ndarray] = None
+def run_round(policy: CommPolicy, ctx: CommRound, st: PolicyState
               ) -> Tuple[jnp.ndarray, Pytree, PolicyState]:
     """One worker's full round: encode → trigger → decode.
 
     Returns (comm: () bool, delta: pytree, new_state).  Drivers vmap this
-    over the worker/pod dim.  ``comm_override`` (a () bool) replaces the
-    trigger decision for schedule-driven baselines (cyc-IAG, num-IAG) —
-    the payload/state mechanics stay the policy's.
+    over the worker/pod dim.  Schedule-driven baselines (cyc-IAG,
+    num-IAG) are ordinary policies now — ``repro.comm.schedule.
+    ScheduledPolicy`` owns the mask, so there is no override side door.
     """
     payload, aux = policy.encode(ctx, st)
-    if comm_override is None:
-        comm = policy.should_upload(ctx, st, payload, aux)
-    else:
-        comm = comm_override
+    comm = policy.should_upload(ctx, st, payload, aux)
     delta, new_st = policy.decode(ctx, st, payload, aux, comm)
     return comm, delta, new_st

@@ -1,0 +1,124 @@
+"""Schedules as first-class communication policies.
+
+The IAG baselines (cyclic / importance-sampled incremental aggregated
+gradient) are not *triggers* — WHO uploads is decided by a round-robin or
+a coin flip, not by the gradient innovation.  Pre-engine they lived as a
+``comm_override`` special case threaded through ``run_round`` and a
+``scheduled`` branch in ``repro.core.simulate``.  ``ScheduledPolicy``
+promotes them into the ``CommPolicy`` protocol itself: it wraps ANY
+payload policy and replaces only ``should_upload`` with a schedule mask,
+so the payload/state mechanics (dense δ∇, LAQ's quantized innovation, …)
+stay the inner policy's and compositions like cyclic-LAQ are one
+constructor call:
+
+    ScheduledPolicy(LAQPolicy(bits=8), CyclicSchedule())   # "cyc-laq@8"
+
+Schedules read the per-round context the drivers already provide:
+``ctx.k`` (round index), ``ctx.worker_id`` (this worker's slot in the
+vmapped dim) and — for stochastic schedules — ``ctx.key``, the SAME
+per-round PRNG key broadcast to every worker, so the coordinated
+"exactly one worker uploads" decision falls out of each worker computing
+the identical sample and comparing it to its own id (bit-exact with the
+old driver-side mask; tests/golden/iag_sched_80step.json pins this).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm.base import CommPolicy, CommRound, PolicyState, Pytree
+
+
+class Schedule:
+    """WHO uploads at round k — independent of the gradients."""
+    name: str = "schedule"
+    stochastic: bool = False    # True ⇒ drivers must supply ctx.key
+
+    def mask(self, ctx: CommRound) -> jnp.ndarray:
+        """() bool — does worker ``ctx.worker_id`` upload at round ``ctx.k``?"""
+        raise NotImplementedError
+
+
+class CyclicSchedule(Schedule):
+    """Round-robin: worker ``k mod M`` uploads at round k (cyc-IAG)."""
+    name = "cyc"
+
+    def mask(self, ctx: CommRound) -> jnp.ndarray:
+        if ctx.k is None or ctx.worker_id is None:
+            raise ValueError("CyclicSchedule needs ctx.k and ctx.worker_id "
+                             "(the driver must pass the round index and "
+                             "vmap over worker ids)")
+        M = ctx.cfg.num_workers
+        return ctx.worker_id == (ctx.k % M)
+
+
+class SampledSchedule(Schedule):
+    """One worker per round, sampled from ``probs`` (num-IAG: p ∝ L_m).
+
+    ``probs`` is a (M,) simplex vector bound at construction (uniform when
+    None).  Every worker draws with the SAME per-round key, so they agree
+    on the sampled index without any cross-worker communication.
+    """
+    name = "num"
+    stochastic = True
+
+    def __init__(self, probs=None):
+        self.probs = None if probs is None else jnp.asarray(probs)
+
+    def mask(self, ctx: CommRound) -> jnp.ndarray:
+        if ctx.key is None or ctx.worker_id is None:
+            raise ValueError("SampledSchedule needs ctx.key and "
+                             "ctx.worker_id (the driver must split a "
+                             "per-round key and vmap over worker ids)")
+        M = ctx.cfg.num_workers
+        m = jax.random.choice(ctx.key, M, p=self.probs)
+        return ctx.worker_id == m
+
+
+class ScheduledPolicy(CommPolicy):
+    """Any payload policy under a schedule-driven (non-triggered) mask.
+
+    Encode/decode/wire_bytes/state are delegated verbatim to ``inner`` —
+    the server recursion invariant Σ_m ĝ_m = ∇^k therefore holds exactly
+    as it does for the wrapped policy.  Only the upload *decision* is
+    replaced.
+    """
+
+    def __init__(self, inner: CommPolicy, schedule: Schedule):
+        super().__init__(sqnorm_fn=inner.sqnorm_fn)
+        self.inner = inner
+        self.schedule = schedule
+        self.name = f"{schedule.name}-{inner.name}"
+        # mirror the inner policy's driver contract (instance attrs shadow
+        # the class attrs), plus the schedule's own context needs
+        self.state_keys = inner.state_keys
+        self.needs_theta_hat = inner.needs_theta_hat
+        self.needs_L_m = inner.needs_L_m
+        self.needs_grad_at_hat = inner.needs_grad_at_hat
+        self.needs_rng = schedule.stochastic
+
+    def init_state(self, grad0: Pytree,
+                   theta0: Optional[Pytree] = None) -> PolicyState:
+        return self.inner.init_state(grad0, theta0)
+
+    def encode(self, ctx: CommRound, st: PolicyState
+               ) -> Tuple[Pytree, Dict[str, Any]]:
+        return self.inner.encode(ctx, st)
+
+    def should_upload(self, ctx: CommRound, st: PolicyState, payload: Pytree,
+                      aux: Dict[str, Any]) -> jnp.ndarray:
+        return self.schedule.mask(ctx)
+
+    def decode(self, ctx: CommRound, st: PolicyState, payload: Pytree,
+               aux: Dict[str, Any], comm: jnp.ndarray
+               ) -> Tuple[Pytree, PolicyState]:
+        return self.inner.decode(ctx, st, payload, aux, comm)
+
+    def wire_bytes(self, grad_like: Pytree) -> float:
+        return self.inner.wire_bytes(grad_like)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"ScheduledPolicy({self.inner!r}, "
+                f"schedule={self.schedule.name!r})")

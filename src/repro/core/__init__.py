@@ -1,6 +1,16 @@
 """LAG core: trigger rules, lazy aggregation, convex experiment harness."""
 from repro.core.lag import (LAGConfig, WorkerState, hist_init, hist_push,
-                            trigger_rhs, wk_communicate, ps_communicate,
-                            worker_round, server_update, tree_sqnorm)
+                            trigger_rhs, rhs_underflow, wk_communicate,
+                            ps_communicate, worker_round, server_update,
+                            tree_sqnorm)
 from repro.core.convex import Problem, synthetic, real_standin, gisette_standin
-from repro.core.simulate import run, RunResult, ALGOS
+from repro.core.simulate import run, ALGOS
+
+
+def __getattr__(name):
+    # RunResult is the engine's RunReport (see repro.core.simulate);
+    # resolved lazily to keep package start-up cycle-free.
+    if name == "RunResult":
+        from repro.engine.report import RunReport
+        return RunReport
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

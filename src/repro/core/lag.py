@@ -47,12 +47,22 @@ class LAGConfig:
       xi: trigger weights [ξ_d]; scalar → uniform ξ_d = xi for all d.
         Paper default for LAG-WK is ξ = 1/D, for LAG-PS ξ = 10/D.
       rule: "wk" (15a) or "ps" (15b).
+      rhs_floor: lower bound on the trigger RHS.  At *exact* f32
+        convergence the iterate-lag history underflows to 0 (RHS = 0)
+        while round-off residues keep the LHS at the noise floor, so
+        workers fire numerically meaningless uploads forever (the PR-1
+        quirk).  A small positive floor (≫ the LHS noise floor, e.g.
+        1e-10 for O(1)-scale gradients) silences them without touching
+        the descent phase, where the RHS is many orders larger.  0.0
+        (default) preserves the exact paper trigger — required for the
+        ξ = 0 ⇒ LAG ≡ GD equivalence.
     """
     num_workers: int
     alpha: float
     D: int = 10
     xi: float = 0.1
     rule: str = "wk"
+    rhs_floor: float = 0.0
 
     def xi_vector(self) -> jnp.ndarray:
         return jnp.full((self.D,), self.xi, dtype=jnp.float32)
@@ -111,9 +121,25 @@ def hist_push(hist: jnp.ndarray, sqnorm_new: jnp.ndarray) -> jnp.ndarray:
 
 
 def trigger_rhs(hist: jnp.ndarray, cfg: LAGConfig) -> jnp.ndarray:
-    """RHS of (15a)/(15b): (1/(α² M²)) Σ_d ξ_d ‖θ^{k+1-d} − θ^{k-d}‖²."""
+    """RHS of (15a)/(15b): (1/(α² M²)) Σ_d ξ_d ‖θ^{k+1-d} − θ^{k-d}‖²,
+    floored at ``cfg.rhs_floor`` (0.0 ⇒ bit-exact paper trigger)."""
     xi = cfg.xi_vector()
-    return jnp.dot(xi, hist) / (cfg.alpha ** 2 * cfg.num_workers ** 2)
+    raw = jnp.dot(xi, hist) / (cfg.alpha ** 2 * cfg.num_workers ** 2)
+    if cfg.rhs_floor:          # static python float — trace-time branch
+        return jnp.maximum(raw, jnp.float32(cfg.rhs_floor))
+    return raw
+
+
+def rhs_underflow(hist: jnp.ndarray, cfg: LAGConfig,
+                  step: jnp.ndarray) -> jnp.ndarray:
+    """() bool — True when the *un-floored* trigger RHS has underflowed to
+    exactly 0 after the warm-up round (the f32 exact-convergence quirk:
+    round-off-sized LHS residues then fire meaningless uploads unless
+    ``cfg.rhs_floor`` catches them).  Step 0 legitimately has RHS = 0
+    (empty history, the paper's all-upload init), so it is excluded."""
+    xi = cfg.xi_vector()
+    raw = jnp.dot(xi, hist) / (cfg.alpha ** 2 * cfg.num_workers ** 2)
+    return (raw == 0.0) & (jnp.asarray(step) > 0)
 
 
 # ---------------------------------------------------------------------------
@@ -129,13 +155,15 @@ def wk_communicate(grad_new: Pytree, grad_hat: Pytree,
     ``sqnorm_fn`` is injectable so the distributed trainer can supply a
     model-axis-psum'd (or Pallas-fused) squared-norm.
 
-    Float32 caveat: at *exact* convergence hist underflows to 0 (RHS = 0)
-    while stale ĝ_m residues keep the LHS at the noise floor, so workers
-    can keep firing numerically meaningless uploads.  This is harmless to
-    the iterates (the deltas are round-off-sized) and unavoidable without
-    breaking the ξ = 0 ⇒ LAG ≡ GD equivalence, which *requires* firing on
-    arbitrarily small changes; measure upload savings over the descent
-    phase (paper Fig. 3 reports exactly that regime).
+    Float32 caveat: near *exact* convergence the trigger RHS collapses
+    toward 0 while stale ĝ_m residues keep the LHS at the noise floor, so
+    workers keep firing numerically meaningless uploads (and the
+    resulting θ jitter keeps hist — and hence the RHS — pinned just above
+    0, a self-sustaining loop).  Harmless to the iterates (the deltas are
+    round-off-sized); ``LAGConfig.rhs_floor`` breaks the loop (the engine
+    reports ``trigger_rhs_underflow`` once the iterate truly freezes),
+    and the default 0.0 preserves the ξ = 0 ⇒ LAG ≡ GD equivalence,
+    which *requires* firing on arbitrarily small changes.
     """
     lhs = sqnorm_fn(tree_sub(grad_new, grad_hat))
     return lhs > trigger_rhs(hist, cfg)

@@ -1,85 +1,48 @@
 """Parameter-server simulation driver for lazy-communication policies.
 
-Runs the paper's Sec.-4 experiments: full-batch distributed optimization of
-a ``repro.core.convex.Problem`` under one of
+DEPRECATION SHIM: since the ``repro.engine`` redesign this module is a
+thin consumer of :class:`repro.engine.Experiment` — the signature and
+trajectory of :func:`run` are unchanged (bit-exact, pinned by
+tests/golden/), but new code should go through the engine front door,
+which additionally composes server optimizers (``server="adam"``,
+``"prox-l1@5.0"``) and topologies.
+
+Runs the paper's Sec.-4 experiments: full-batch distributed optimization
+of a ``repro.core.convex.Problem`` under one of
 
   gd       — batch gradient descent, all M workers upload each round (eq. 2)
   lag-wk   — LAG with the worker-side trigger (15a)
   lag-ps   — LAG with the server-side trigger (15b)
   laq      — LAG + b-bit quantized uploads with error feedback (LAQ,
-             Sun et al. 2019) — fewer *bytes* per upload, not just fewer
-             uploads
-  lasg-wk  — the stochastic-trigger variant (LASG-WK, Chen et al. 2020);
-             with the full-batch gradients used here it coincides with
-             lag-wk by construction (the correlated-difference trigger
-             degenerates to 15a), which doubles as a consistency check
+             Sun et al. 2019)
+  lasg-wk  — the stochastic-trigger variant (LASG-WK, Chen et al. 2020)
   cyc-iag  — cyclic incremental aggregated gradient (one worker per round)
   num-iag  — IAG with worker m sampled ∝ L_m (one worker per round)
 
-All algorithms share the lazy-aggregation recursion (4); WHO uploads WHAT
-is delegated to a ``repro.comm.CommPolicy`` (the IAG baselines are the GD
-payload under a schedule, not a trigger, so they keep a driver-side mask).
-The whole K-iteration run is one lax.scan.
+plus any spec string ``repro.comm.make_policy`` parses (``"laq@8"``,
+``"cyc-laq@8"``, …).  The IAG baselines are ordinary
+``ScheduledPolicy``s now — the old driver-side ``comm_override``/
+``scheduled`` special case is gone.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import lag
 from repro.core.convex import Problem
 
 ALGOS = ("gd", "lag-wk", "lag-ps", "laq", "lasg-wk", "cyc-iag", "num-iag")
-# algos whose round is a CommPolicy trigger (vs a driver-side schedule)
+# algos whose round is a CommPolicy trigger (vs a schedule-driven mask)
 POLICY_ALGOS = ("gd", "lag-wk", "lag-ps", "laq", "lasg-wk")
-
-
-@dataclasses.dataclass
-class RunResult:
-    algo: str
-    losses: np.ndarray          # (K,) L(θ^k)
-    comm_mask: np.ndarray       # (K, M) bool — worker m uploaded at round k
-    opt_loss: float
-    bytes_per_upload: float = 0.0   # policy-declared wire bytes of ONE upload
-
-    @property
-    def comms_per_iter(self) -> np.ndarray:
-        return self.comm_mask.sum(axis=1)
-
-    @property
-    def cum_comms(self) -> np.ndarray:
-        return np.cumsum(self.comms_per_iter)
-
-    @property
-    def cum_wire_bytes(self) -> np.ndarray:
-        """Cumulative policy-declared bytes on the wire (LAQ's b-bit uploads
-        cost ~b/32 of a dense one — upload counts alone can't see that)."""
-        return self.cum_comms * self.bytes_per_upload
-
-    def iters_to(self, eps: float) -> Optional[int]:
-        err = self.losses - self.opt_loss
-        hit = np.nonzero(err <= eps)[0]
-        return int(hit[0]) if hit.size else None
-
-    def comms_to(self, eps: float) -> Optional[int]:
-        k = self.iters_to(eps)
-        return int(self.cum_comms[k]) if k is not None else None
-
-    def bytes_to(self, eps: float) -> Optional[float]:
-        k = self.iters_to(eps)
-        return float(self.cum_wire_bytes[k]) if k is not None else None
 
 
 def run(problem: Problem, algo: str, *, K: int = 2000,
         D: int = 10, xi: Optional[float] = None, alpha: Optional[float] = None,
         seed: int = 0, theta0: Optional[jnp.ndarray] = None,
         opt_loss: Optional[float] = None, l1: float = 0.0,
-        policy=None, bits: int = 4) -> RunResult:
-    """Simulate ``K`` rounds of ``algo`` on ``problem``.
+        policy=None, bits: int = 4, server=None, rhs_floor: float = 0.0):
+    """Simulate ``K`` rounds of ``algo`` on ``problem`` → ``RunReport``.
 
     Defaults follow the paper: α = 1/L for GD/LAG/LAQ/LASG and 1/(M·L) for
     the IAG variants; ξ = 1/D for the worker-side triggers and 10/D for
@@ -87,106 +50,29 @@ def run(problem: Problem, algo: str, *, K: int = 2000,
     (pass any ``CommPolicy``); ``bits`` sets LAQ's quantization width.
 
     ``l1 > 0`` enables PROXIMAL LAG (the extension the paper flags in R2 /
-    Conclusions): the server applies soft-thresholding prox_{α·l1·‖·‖₁}
-    after every lazily aggregated step, and the reported "loss" becomes the
-    composite objective L(θ) + l1·‖θ‖₁.
+    Conclusions): the ``prox-l1`` server optimizer soft-thresholds after
+    every lazily aggregated step and the reported "loss" becomes the
+    composite objective L(θ) + l1·‖θ‖₁.  ``server`` selects any other
+    ``repro.engine.server`` spec (e.g. ``"adam"`` for LAG-Adam in the
+    convex sim); ``rhs_floor`` floors the trigger RHS against the f32
+    exact-convergence underflow quirk (see ``repro.core.lag.LAGConfig``).
     """
-    from repro import comm as comm_lib   # function-level: core ↔ comm cycle
+    from repro.engine import Experiment   # function-level: core ↔ engine
 
-    if algo not in ALGOS:
-        raise ValueError(f"unknown algo {algo!r}")
-    M, d = problem.num_workers, problem.dim
-    if alpha is None:
-        alpha = 1.0 / (M * problem.L) if "iag" in algo else 1.0 / problem.L
-    if xi is None:
-        xi = (10.0 / D) if algo == "lag-ps" else (1.0 / D)
-    cfg = lag.LAGConfig(num_workers=M, alpha=float(alpha), D=D, xi=float(xi),
-                        rule="ps" if algo == "lag-ps" else "wk")
-    if policy is None:
-        # IAG variants ride the GD payload under a driver-side schedule
-        policy = comm_lib.make_policy(
-            algo if algo in POLICY_ALGOS else "gd", bits=bits)
-    scheduled = algo not in POLICY_ALGOS
+    # any registry spec beyond ALGOS ("laq@8", "cyc-laq@8") is fine — the
+    # engine's spec parser validates with an actionable message
+    return Experiment(problem=problem, algo=algo, steps=K, D=D, xi=xi,
+                      alpha=alpha, seed=seed, theta0=theta0,
+                      opt_loss=opt_loss, l1=l1, policy=policy, bits=bits,
+                      server=server, rhs_floor=rhs_floor).run()
 
-    theta0 = jnp.zeros((d,), problem.X.dtype) if theta0 is None else theta0
-    # Initialization (paper Alg. 1/2 line 2): all workers upload at k=0 —
-    # the policy mirrors start at the exact full-precision ∇L_m(θ⁰).
-    g0 = problem.worker_grads(theta0)                      # (M, d)
-    pst0 = policy.init_state(
-        g0, jnp.broadcast_to(theta0, (M, d)) if policy.needs_theta_hat
-        else None)
-    state0 = dict(
-        theta=theta0,
-        nabla=jnp.sum(g0, axis=0),
-        pst=pst0,
-        hist=lag.hist_init(D),
-        key=jax.random.PRNGKey(seed),
-        k=jnp.zeros((), jnp.int32),
-    )
-    L_m = problem.L_m
-    p_num = L_m / jnp.sum(L_m)
 
-    def scheduled_mask(state):
-        k, key = state["k"], state["key"]
-        if algo == "cyc-iag":
-            return jnp.arange(M) == (k % M), key
-        # num-iag
-        key, sub = jax.random.split(key)
-        m = jax.random.choice(sub, M, p=p_num)
-        return jnp.arange(M) == m, key
-
-    def step(state, _):
-        theta = state["theta"]
-        loss = problem.loss(theta)
-        if l1 > 0.0:
-            loss = loss + l1 * jnp.sum(jnp.abs(theta))
-        grads_new = problem.worker_grads(theta)            # (M, d)
-        if policy.needs_grad_at_hat:
-            grad_at_hat = problem.worker_grads_at(state["pst"]["theta_hat"])
-        else:
-            grad_at_hat = grads_new     # unused placeholder, DCE'd
-        if scheduled:
-            comm_override, key = scheduled_mask(state)
-        else:
-            comm_override, key = jnp.zeros((M,), bool), state["key"]
-
-        def one_worker(g, pst_m, gah, ovr, lm):
-            ctx = comm_lib.CommRound(theta=theta, grad_new=g,
-                                     hist=state["hist"], cfg=cfg,
-                                     L_m=lm, grad_at_hat=gah)
-            return comm_lib.run_round(policy, ctx, pst_m,
-                                      comm_override=ovr if scheduled
-                                      else None)
-
-        comm, delta, new_pst = jax.vmap(one_worker)(
-            grads_new, state["pst"], grad_at_hat, comm_override, L_m)
-
-        theta_new, nabla_new, hist_new = lag.server_update(
-            theta, state["nabla"], jnp.sum(delta, axis=0), state["hist"], cfg)
-        if l1 > 0.0:
-            # proximal step: soft-threshold at α·l1, then recompute the
-            # iterate-lag entry from the POST-prox movement
-            thr = cfg.alpha * l1
-            theta_prox = jnp.sign(theta_new) * jnp.maximum(
-                jnp.abs(theta_new) - thr, 0.0)
-            hist_new = lag.hist_push(
-                state["hist"], lag.tree_sqnorm(theta_prox - theta))
-            theta_new = theta_prox
-        new_state = dict(
-            theta=theta_new,
-            nabla=nabla_new,
-            pst=new_pst,
-            hist=hist_new,
-            key=key,
-            k=state["k"] + 1,
-        )
-        return new_state, (loss, comm)
-
-    _, (losses, comm_mask) = jax.jit(
-        lambda s: jax.lax.scan(step, s, None, length=K))(state0)
-    if opt_loss is None:
-        _, opt_loss = problem.optimum()
-    return RunResult(algo=algo, losses=np.asarray(losses),
-                     comm_mask=np.asarray(comm_mask),
-                     opt_loss=float(opt_loss),
-                     bytes_per_upload=policy.wire_bytes(g0[0]))
+def __getattr__(name):
+    # Backwards-compatible name: the engine's unified report carries a
+    # strict superset of the old RunResult fields/accessors.  Resolved
+    # lazily (PEP 562) — an eager import here would close the
+    # comm → core → engine → comm cycle during interpreter start-up.
+    if name == "RunResult":
+        from repro.engine.report import RunReport
+        return RunReport
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

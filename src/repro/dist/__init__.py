@@ -1,12 +1,15 @@
 """``repro.dist`` — the distributed-LAG training API.
 
-One import surface for everything between ``repro.comm`` (pluggable
-communication policies) / ``repro.core.lag`` (pure per-worker primitives)
-and the launch scripts:
+One import surface for everything between the ``repro.engine`` round
+(shared encode→trigger→decode→server-update→metrics; policies from
+``repro.comm``, server steps from ``repro.engine.server``, placement
+from ``repro.engine.topology``) and the launch scripts:
 
   lag_trainer   TrainerConfig / init_state / make_train_step / split_batch
+                — the deep consumer of ``engine.round`` (BatchShards)
   sharding      spec_for + tree/batch specs & shardings (rule-based GSPMD)
   pod_lag       pod-level LAG where the cross-pod all-reduce is skipped
+                (the PodMesh topology's lax.cond reduce)
   hlo_analysis  collective_bytes — wire-traffic accounting from HLO text,
                 plus logical_upload_bytes for policy-declared costs
 """

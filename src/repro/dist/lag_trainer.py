@@ -3,43 +3,39 @@ deep-learning training step.
 
 A "worker" here is a slice of the global batch (rows ``m·B/W:(m+1)·B/W``,
 the layout ``repro.data.make_heterogeneous_inputs`` produces).  Every step
-computes all W per-worker gradients in one vmapped backward pass, hands
-each worker's round to a ``repro.comm.CommPolicy`` (trigger + upload
-payload), and applies the server recursion (eq. 4): only triggered workers
-contribute their payload δ∇ to the aggregate ∇^k.  Algorithm choice is one
-config switch:
+computes all W per-worker gradients in one vmapped backward pass and hands
+the whole round — encode → trigger → decode → reduce → server update →
+metrics — to :func:`repro.engine.rounds.lag_round`.  This module owns only
+the deep-specific parts: batch splitting/placement (via a
+``repro.engine.topology`` backend), the vmapped backward pass(es), and
+the loss metric.  Algorithm choice is one config switch:
 
   gd        every worker uploads every round (synchronous baseline)
-  lag-wk    LAG with the worker-side trigger (15a) + SGD server step
-  lag-ps    LAG with the server-side trigger (15b) + SGD server step
+  lag-wk    LAG with the worker-side trigger (15a)
+  lag-ps    LAG with the server-side trigger (15b)
   laq       LAG trigger on the b-bit quantized innovation with error
-            feedback (LAQ, Sun et al. 2019) — ~32/b× fewer wire bytes per
-            upload, reported by the policy-declared byte counters
-  lasg-wk   stochastic worker trigger (LASG-WK, Chen et al. 2020): the LHS
-            differences two gradients on the CURRENT minibatch (one extra
-            vmapped backward pass at the stale iterate θ̂_m)
+            feedback (LAQ, Sun et al. 2019)
+  lasg-wk   stochastic worker trigger (LASG-WK, Chen et al. 2020): one
+            extra vmapped backward pass at the stale iterate θ̂_m
   adam      every-round uploads, Adam server step (beyond-paper baseline)
   lag-adam  LAG-WK trigger + Adam server step (beyond-paper; known trigger
             pathology under preconditioning — see EXPERIMENTS.md)
 
+plus any ``repro.comm.make_policy`` spec (``"laq@8"``, ``"cyc-iag"``,
+``"num-lag-wk"``, …).  The server step is its own axis now
+(``TrainerConfig.server`` / ``repro.engine.server``), so e.g. proximal
+LAG runs on the deep trainer: ``TrainerConfig(algo="lag-wk",
+server="prox-l1@1e-4")``.
+
 State is a flat dict pytree (checkpoint- and donation-friendly) with the
-LAG group under ``state["lag"]``:
-
-  grad_hat        (W, *param) per-worker policy mirror ĝ_m (q̂_m for LAQ)
-  nabla           aggregate ∇^k = Σ_m grad_hat_m
-  hist            (D,) iterate-lag ring buffer ‖θ^{k+1-d} − θ^{k-d}‖²
-  comm_total      scalar upload counter (gd uploads = steps × W)
-  comm_per_worker (W,) per-worker upload counts
-  theta_hat       lag-ps / lasg-wk: per-worker last-upload iterates
-  L_m             lag-ps only: per-worker smoothness estimates
-  resid           laq only: float32 error-feedback residuals e_m
-
-Wire traffic is policy-declared: metrics report ``wire_bytes_total`` =
-uploads × ``policy.wire_bytes(params)``, so LAQ's 4-bit uploads show up as
-~8× fewer bytes, not just fewer rounds.
+LAG group under ``state["lag"]`` — the layout documented in
+``repro.engine.rounds`` and unchanged from the pre-engine trainer, so old
+checkpoints restore.  Wire traffic is policy-declared: metrics report
+``wire_bytes_total`` = uploads × ``policy.wire_bytes(params)``.
 
 Sharding is applied OUTSIDE via ``repro.dist.sharding.tree_shardings`` —
-the step function itself is placement-free and jit/donate-friendly.
+the step function itself is placement-free and jit/donate-friendly (pod
+placement comes from the ``PodMesh`` topology's sharding constraints).
 """
 from __future__ import annotations
 
@@ -50,9 +46,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import lag
+from repro.engine import rounds as engine_rounds
+from repro.engine import server as server_lib
+from repro.engine import topology as topo_lib
+# re-exported names (pre-engine home of these helpers)
+from repro.engine.rounds import comm_counter_updates, policy_rounds  # noqa: F401
+from repro.engine.topology import split_batch  # noqa: F401
 from repro.models import model
 from repro.models.common import ModelConfig
-from repro.optim import optimizers
 
 Pytree = Any
 
@@ -70,10 +71,15 @@ class TrainerConfig:
     with that same α, which makes the skip condition ≈ L_m ≤ √(ξD)/lr —
     smooth (low-noise) workers skip, rough ones upload (paper Lemma 4).
 
-    ``laq_bits`` sets LAQ's quantization width; ``use_pallas_comm`` routes
-    the trigger squared-norms AND LAQ's encode through the fused Pallas
-    kernels in ``repro.kernels.lag_trigger`` (default off: on CPU the
-    kernels run in interpret mode, which is for validation, not speed).
+    ``algo`` accepts the trainer names above or any ``repro.comm``
+    policy spec; ``server`` overrides the algo-derived server optimizer
+    with any ``repro.engine.server`` spec (``"prox-l1@1e-4"``,
+    ``"momentum@0.9"``, …).  ``rhs_floor`` floors the trigger RHS against
+    the f32 exact-convergence underflow quirk; ``laq_bits`` sets LAQ's
+    quantization width; ``use_pallas_comm`` routes the trigger
+    squared-norms AND LAQ's encode through the fused Pallas kernels in
+    ``repro.kernels.lag_trigger`` (default off: on CPU the kernels run in
+    interpret mode, which is for validation, not speed).
     """
     algo: str = "lag-wk"
     num_workers: int = 4
@@ -86,10 +92,17 @@ class TrainerConfig:
     adam_b2: float = 0.999
     laq_bits: int = 4               # LAQ quantization width [b]
     use_pallas_comm: bool = False   # fused Pallas sqnorm + LAQ encode
+    server: Optional[str] = None    # repro.engine.server spec override
+    rhs_floor: float = 0.0          # trigger-RHS floor (f32 quirk knob)
 
     def __post_init__(self):
         if self.algo not in ALGOS:
-            raise ValueError(f"unknown algo {self.algo!r}; known: {ALGOS}")
+            # any spec the policy registry parses is a valid algo; this
+            # raises the registry's actionable message otherwise
+            from repro import comm
+            comm.make_policy(self.algo, bits=self.laq_bits)
+        if self.server is not None:
+            server_lib.make_server(self.server)   # validate spec early
 
     @property
     def uses_adam(self) -> bool:
@@ -101,11 +114,12 @@ class TrainerConfig:
 
     def lag_config(self, num_units: Optional[int] = None) -> lag.LAGConfig:
         # α = lr/M: eq. (4) with the aggregate normalized by worker count —
-        # server_update and trigger_rhs both read this α, so the update and
-        # the trigger stay mutually consistent (see class docstring)
+        # the server step and trigger_rhs both read this α, so the update
+        # and the trigger stay mutually consistent (see class docstring)
         m = num_units or self.num_workers
         return lag.LAGConfig(num_workers=m, alpha=self.lr / m, D=self.D,
-                             xi=self.xi, rule=self.lag_rule)
+                             xi=self.xi, rule=self.lag_rule,
+                             rhs_floor=self.rhs_floor)
 
     def comm_policy(self):
         """The ``repro.comm`` policy this config selects (adam aliases map
@@ -119,49 +133,35 @@ class TrainerConfig:
                                 use_pallas=self.use_pallas_comm,
                                 sqnorm_fn=sqnorm_fn)
 
+    def server_optimizer(self) -> server_lib.ServerOptimizer:
+        """The ``repro.engine.server`` optimizer this config selects:
+        ``server`` spec if set, else adam for the adam algos, heavy-ball
+        when ``momentum > 0``, else the paper's SGD (eq. 4)."""
+        if self.server is not None:
+            return server_lib.make_server(self.server)
+        if self.uses_adam:
+            return server_lib.AdamServer(b1=self.adam_b1, b2=self.adam_b2)
+        if self.momentum:
+            return server_lib.MomentumServer(self.momentum)
+        return server_lib.SGDServer()
+
     def replace(self, **kw) -> "TrainerConfig":
         return dataclasses.replace(self, **kw)
-
-
-# ---------------------------------------------------------------------------
-# Batch splitting
-# ---------------------------------------------------------------------------
-
-def split_batch(batch: Dict[str, jnp.ndarray], num_workers: int) -> Dict:
-    """Reshape every leaf's batch dim into a leading worker dim.
-
-    ``(B, …) → (W, B/W, …)``; mRoPE ``positions3`` leaves carry a leading
-    3-axis, so their batch dim is axis 1 and the worker dim still lands in
-    front: ``(3, B, S) → (W, 3, B/W, S)``.  Scalars are broadcast to (W,).
-    """
-    W = num_workers
-
-    def one(path, x):
-        key = jax.tree_util.keystr(path)
-        if x.ndim == 0:
-            return jnp.broadcast_to(x, (W,))
-        b_ax = 1 if "positions3" in key else 0
-        B = x.shape[b_ax]
-        if B % W:
-            raise ValueError(f"batch dim {B} not divisible by {W} workers"
-                             f" at {key}")
-        shp = x.shape[:b_ax] + (W, B // W) + x.shape[b_ax + 1:]
-        return jnp.moveaxis(x.reshape(shp), b_ax, 0)
-
-    return jax.tree_util.tree_map_with_path(one, batch)
 
 
 # ---------------------------------------------------------------------------
 # State
 # ---------------------------------------------------------------------------
 
-def init_state(key, cfg: ModelConfig, tcfg: TrainerConfig) -> Dict:
+def init_state(key, cfg: ModelConfig, tcfg: TrainerConfig,
+               policy=None, server=None, topology=None) -> Dict:
     """Fresh trainer state.  ``grad_hat`` starts at zero with an empty
     history, so round 0 triggers every worker (lhs ‖∇L_m‖² > rhs 0) and
     delivers the exact first GD step — the paper's all-upload init."""
     W = tcfg.num_workers
     params = model.init(key, cfg)
-    policy = tcfg.comm_policy()
+    policy = policy if policy is not None else tcfg.comm_policy()
+    server = server if server is not None else tcfg.server_optimizer()
     gh_dtype = jnp.dtype(tcfg.grad_hat_dtype) if tcfg.grad_hat_dtype \
         else None
 
@@ -186,80 +186,51 @@ def init_state(key, cfg: ModelConfig, tcfg: TrainerConfig) -> Dict:
         # with no oracle L_m for a deep net we use the 1/α heuristic
         # (paper: α = 1/L)
         lag_state["L_m"] = jnp.full((W,), 1.0 / tcfg.lr, jnp.float32)
+    if topology is not None:
+        lag_state.update(topology.extra_state())
 
     state = {"params": params, "lag": lag_state,
              "step": jnp.zeros((), jnp.int32)}
-    if tcfg.uses_adam:
-        opt = optimizers.adam(tcfg.lr, b1=tcfg.adam_b1, b2=tcfg.adam_b2)
-        state["opt"] = opt.init(params)
-    elif tcfg.momentum:
-        state["opt"] = optimizers.sgd(tcfg.lr, tcfg.momentum).init(params)
+    opt0 = server.init(params)
+    if opt0 is not None:
+        state["opt"] = opt0
     return state
-
-
-# ---------------------------------------------------------------------------
-# Shared LAG-step pieces (also used by repro.dist.pod_lag)
-# ---------------------------------------------------------------------------
-
-def comm_counter_updates(lag_state: Dict, comm: jnp.ndarray
-                         ) -> Tuple[jnp.ndarray, Dict]:
-    """(int mask, {comm_total, comm_per_worker} updates) for this round."""
-    comm_i = comm.astype(jnp.int32)
-    return comm_i, {
-        "comm_total": lag_state["comm_total"] + jnp.sum(comm_i),
-        "comm_per_worker": lag_state["comm_per_worker"] + comm_i,
-    }
-
-
-def policy_rounds(policy, lagcfg: lag.LAGConfig, params: Pytree,
-                  grads: Pytree, lag_state: Dict,
-                  grad_at_hat: Optional[Pytree] = None):
-    """Vmap a ``CommPolicy`` over the leading worker/pod dim.
-
-    Returns (comm (W,) bool, delta stacked pytree, new policy-state dict) —
-    the stacked equivalents of ``repro.comm.run_round``.  Shared by the
-    flat trainer and ``repro.dist.pod_lag``.
-    """
-    W = jax.tree_util.tree_leaves(grads)[0].shape[0]
-    pst = {k: lag_state[k] for k in policy.state_keys}
-    L_arr = lag_state["L_m"] if policy.needs_L_m \
-        else jnp.zeros((W,), jnp.float32)
-    gah = grad_at_hat if grad_at_hat is not None else grads  # DCE'd if unused
-    hist = lag_state["hist"]
-
-    def one_worker(g, pst_m, gah_m, lm):
-        from repro.comm import CommRound, run_round
-        ctx = CommRound(theta=params, grad_new=g, hist=hist, cfg=lagcfg,
-                        L_m=lm, grad_at_hat=gah_m)
-        return run_round(policy, ctx, pst_m)
-
-    comm, delta, new_pst = jax.vmap(one_worker)(grads, pst, gah, L_arr)
-    return comm, delta, new_pst
 
 
 # ---------------------------------------------------------------------------
 # Train step
 # ---------------------------------------------------------------------------
 
-def make_train_step(cfg: ModelConfig, tcfg: TrainerConfig):
-    """Build the jit/donate-friendly ``(state, batch) → (state, metrics)``."""
-    W = tcfg.num_workers
-    lagcfg = tcfg.lag_config()
-    policy = tcfg.comm_policy()
-    opt = None
-    if tcfg.uses_adam:
-        opt = optimizers.adam(tcfg.lr, b1=tcfg.adam_b1, b2=tcfg.adam_b2)
-    elif tcfg.momentum:
-        opt = optimizers.sgd(tcfg.lr, tcfg.momentum)
+def make_train_step(cfg: ModelConfig, tcfg: TrainerConfig,
+                    policy=None, server=None, topology=None,
+                    schedule_seed: int = 0):
+    """Build the jit/donate-friendly ``(state, batch) → (state, metrics)``.
+
+    ``policy``/``server``/``topology`` default to what ``tcfg`` selects /
+    the flat ``BatchShards`` backend; ``repro.dist.pod_lag`` passes the
+    ``PodMesh`` topology instead — the round itself is
+    ``repro.engine.rounds.lag_round`` either way.  ``schedule_seed``
+    seeds the per-round keys of stochastic schedule policies (num-IAG);
+    it is deterministic in the step counter, so no RNG state needs
+    checkpointing.
+    """
+    policy = policy if policy is not None else tcfg.comm_policy()
+    server = server if server is not None else tcfg.server_optimizer()
+    topology = topology if topology is not None else topo_lib.BatchShards()
+    reduce_fn = topology.reduce_fn()
 
     def train_step(state: Dict, batch: Dict) -> Tuple[Dict, Dict]:
         params, lag_state = state["params"], state["lag"]
-        shards = split_batch(batch, W)
+        # unit count from the state's worker dim (pod_lag inits it with
+        # n_pods); for the flat trainer it equals tcfg.num_workers
+        W = lag_state["comm_per_worker"].shape[0]
+        lagcfg = tcfg.lag_config(num_units=W)
+        shards = topology.place_batch(batch, W)
 
         losses, grads = jax.vmap(
             lambda b: jax.value_and_grad(
                 lambda p: model.loss_fn(p, cfg, b))(params))(shards)
-        loss = jnp.mean(losses)
+        loss = server.composite_loss(jnp.mean(losses), params)
 
         grad_at_hat = None
         if policy.needs_grad_at_hat:
@@ -270,51 +241,24 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainerConfig):
                     lambda p: model.loss_fn(p, cfg, b))(th),
                 in_axes=(0, 0))(lag_state["theta_hat"], shards)
 
-        comm, delta, new_pst = policy_rounds(
-            policy, lagcfg, params, grads, lag_state, grad_at_hat)
-        sum_delta = jax.tree_util.tree_map(lambda d: jnp.sum(d, axis=0),
-                                           delta)
+        key = None
+        if policy.needs_rng:
+            # stochastic schedules: a per-round key derived from the step
+            # counter (deterministic, checkpoint-free)
+            key = jax.random.fold_in(jax.random.PRNGKey(schedule_seed),
+                                     state["step"])
 
-        if opt is None:
-            # paper server update (eq. 4): θ ← θ − α(∇^{k-1} + Σ δ∇)
-            new_params, new_nabla, new_hist = lag.server_update(
-                params, lag_state["nabla"], sum_delta, lag_state["hist"],
-                lagcfg)
-            new_opt = None
-        else:
-            new_nabla = lag.tree_add(lag_state["nabla"], sum_delta)
-            # the optimizer sees the mean aggregate (same normalization as
-            # the SGD path's α = lr/M)
-            new_params, new_opt = opt.update(
-                lag.tree_scale(new_nabla, 1.0 / W), state["opt"],
-                params, state["step"])
-            new_hist = lag.hist_push(
-                lag_state["hist"],
-                lag.tree_sqnorm(lag.tree_sub(new_params, params)))
-
-        comm_i, counters = comm_counter_updates(lag_state, comm)
-        new_lag = dict(lag_state, nabla=new_nabla, hist=new_hist,
-                       **new_pst, **counters)
+        new_params, new_opt, new_lag, metrics = engine_rounds.lag_round(
+            policy, server, lagcfg, params=params,
+            opt_state=state.get("opt"), lag_state=lag_state, grads=grads,
+            step=state["step"], grad_at_hat=grad_at_hat, key=key,
+            reduce_fn=reduce_fn)
 
         new_state = dict(state, params=new_params, lag=new_lag,
                          step=state["step"] + 1)
         if new_opt is not None:
             new_state["opt"] = new_opt
-
-        # policy-declared traffic: ONE upload of the param-shaped gradient
-        # costs wire_bytes (a trace-time constant), so totals are exact
-        # rescalings of the upload counters
-        bytes_per_upload = policy.wire_bytes(params)
-        metrics = {
-            "loss": loss,
-            "comm_this_round": jnp.sum(comm_i),
-            "comm_total": new_lag["comm_total"],
-            "wire_bytes_this_round":
-                jnp.sum(comm_i).astype(jnp.float32) * bytes_per_upload,
-            "wire_bytes_total":
-                new_lag["comm_total"].astype(jnp.float32) * bytes_per_upload,
-            "trigger_rhs": lag.trigger_rhs(lag_state["hist"], lagcfg),
-        }
+        metrics["loss"] = loss
         return new_state, metrics
 
     return train_step

@@ -11,47 +11,36 @@ boundary (verified structurally by ``tests/test_dist.py``, which checks for
 an all-reduce inside an HLO conditional, and quantitatively by
 ``repro.dist.hlo_analysis.collective_bytes(..., pod_size=…)``).
 
+Since the ``repro.engine`` redesign this module is a thin consumer: the
+``lax.cond`` reduce and the pod-axis batch pinning live in
+``repro.engine.topology.PodMesh``, and the step is the same
+``repro.dist.lag_trainer.make_train_step`` every other topology uses —
+one shared ``engine`` round, so any policy × any server optimizer plugs
+in (pod-LAQ shrinks the bytes a NON-quiet round moves; a ``prox-l1``
+server gives proximal pod-LAG).
+
 The trajectory is bit-identical to running the unconditional reduction:
 when no pod triggers, every delta is exactly zero, so skipping the
-collective changes nothing except the wire traffic.  Any policy plugs in —
-pod-LAQ additionally shrinks the bytes a NON-quiet round moves (the payload
-is the b-bit innovation), which ``metrics["wire_bytes_this_round"]``
-reports via the policy's declared cost.
-
-State layout matches ``repro.dist.lag_trainer`` with the worker dim sized
-``n_pods`` plus a ``rounds_skipped`` counter.
+collective changes nothing except the wire traffic.  State layout matches
+``repro.dist.lag_trainer`` with the worker dim sized ``n_pods`` plus a
+``rounds_skipped`` counter.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
-import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
-
-from repro.core import lag
 from repro.dist import lag_trainer
-from repro.dist.lag_trainer import (TrainerConfig, comm_counter_updates,
-                                    policy_rounds, split_batch)
-from repro.models import model
+from repro.dist.lag_trainer import TrainerConfig
+from repro.engine.topology import PodMesh
 from repro.models.common import ModelConfig
 
 
 def init_state(key, cfg: ModelConfig, tcfg: TrainerConfig,
                n_pods: int) -> Dict:
     """Trainer state with one lazy-aggregation unit per pod."""
-    state = lag_trainer.init_state(key, cfg,
-                                   tcfg.replace(num_workers=n_pods))
-    state["lag"]["rounds_skipped"] = jnp.zeros((), jnp.int32)
-    return state
-
-
-def _pod_constraint(mesh, x: jnp.ndarray) -> jnp.ndarray:
-    """Pin the leading (pod) dim of a worker-split leaf onto the pod axis."""
-    if "pod" not in mesh.axis_names:
-        return x
-    spec = P(*(("pod",) + (None,) * (x.ndim - 1)))
-    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    return lag_trainer.init_state(
+        key, cfg, tcfg.replace(num_workers=n_pods),
+        topology=PodMesh(num_units=n_pods))
 
 
 def make_pod_lag_step(cfg: ModelConfig, tcfg: TrainerConfig, mesh,
@@ -59,73 +48,5 @@ def make_pod_lag_step(cfg: ModelConfig, tcfg: TrainerConfig, mesh,
     """Build ``(state, batch) → (state, metrics)`` for a pod×data×model
     mesh.  The number of pods is read off the state's worker dim;
     ``policy`` defaults to the one ``tcfg.algo`` selects."""
-    if policy is None:
-        policy = tcfg.comm_policy()
-
-    def step(state: Dict, batch: Dict) -> Tuple[Dict, Dict]:
-        params, lag_state = state["params"], state["lag"]
-        n_pods = jax.tree_util.tree_leaves(
-            lag_state["grad_hat"])[0].shape[0]
-        lagcfg = tcfg.lag_config(num_units=n_pods)
-
-        shards = jax.tree_util.tree_map(
-            lambda x: _pod_constraint(mesh, x),
-            split_batch(batch, n_pods))
-
-        losses, grads = jax.vmap(
-            lambda b: jax.value_and_grad(
-                lambda p: model.loss_fn(p, cfg, b))(params))(shards)
-        loss = jnp.mean(losses)
-
-        grad_at_hat = None
-        if policy.needs_grad_at_hat:
-            grad_at_hat = jax.vmap(
-                lambda th, b: jax.grad(
-                    lambda p: model.loss_fn(p, cfg, b))(th),
-                in_axes=(0, 0))(lag_state["theta_hat"], shards)
-
-        # per-pod policy round against the pod's mirror state
-        comm, delta, new_pst = policy_rounds(
-            policy, lagcfg, params, grads, lag_state, grad_at_hat)
-        any_comm = jnp.any(comm)
-
-        # THE pod-LAG move: the cross-pod reduction only exists on the true
-        # branch.  When no pod triggered every delta is exactly zero, so the
-        # false branch returns zeros and the DCI link carries nothing.  The
-        # zeros mirror the summed DELTA's shape/dtype (LAQ payloads are
-        # float32 regardless of param dtype, and cond branches must agree).
-        sum_delta = jax.lax.cond(
-            any_comm,
-            lambda d: jax.tree_util.tree_map(
-                lambda x: jnp.sum(x, axis=0), d),
-            lambda d: jax.tree_util.tree_map(
-                lambda x: jnp.zeros(x.shape[1:], x.dtype), d),
-            delta)
-
-        new_params, new_nabla, new_hist = lag.server_update(
-            params, lag_state["nabla"], sum_delta, lag_state["hist"], lagcfg)
-
-        comm_i, counters = comm_counter_updates(lag_state, comm)
-        new_lag = dict(
-            lag_state,
-            nabla=new_nabla,
-            hist=new_hist,
-            rounds_skipped=lag_state["rounds_skipped"]
-            + (1 - any_comm.astype(jnp.int32)),
-            **new_pst,
-            **counters)
-
-        new_state = dict(state, params=new_params, lag=new_lag,
-                         step=state["step"] + 1)
-        bytes_per_upload = policy.wire_bytes(params)
-        metrics = {
-            "loss": loss,
-            "comm_this_round": jnp.sum(comm_i),
-            "comm_total": new_lag["comm_total"],
-            "wire_bytes_this_round":
-                jnp.sum(comm_i).astype(jnp.float32) * bytes_per_upload,
-            "skipped_round": (~any_comm).astype(jnp.int32),
-        }
-        return new_state, metrics
-
-    return step
+    return lag_trainer.make_train_step(cfg, tcfg, policy=policy,
+                                       topology=PodMesh(mesh=mesh))

@@ -1,0 +1,50 @@
+"""``repro.engine`` — one composable experiment API over communication
+policies, server optimizers, and topologies.
+
+The lazy-aggregation round factors into four independent axes, each with
+its own registry and spec grammar:
+
+  WHO uploads WHAT     ``repro.comm.CommPolicy``      make_policy("laq@8")
+  WHEN (scheduled)     ``repro.comm.ScheduledPolicy`` make_policy("cyc-iag")
+  server step          ``engine.server``              make_server("prox-l1@5.0")
+  unit placement       ``engine.topology``            make_topology("pods:2")
+
+``engine.round`` (:func:`repro.engine.rounds.lag_round`) owns the shared
+encode → trigger → decode → reduce → server-update → metrics sequence;
+every driver in the repo (``repro.core.simulate``, ``repro.dist.
+lag_trainer``, ``repro.dist.pod_lag``) is a thin consumer.  The
+declarative front door is :class:`Experiment` → :class:`RunReport`:
+
+    from repro.engine import Experiment
+    r = Experiment(problem=prob, algo="lag-wk", steps=3000).run()
+    r.comms_to(1e-8), r.bytes_to(1e-8)
+"""
+from repro.engine.server import (AdamServer, MomentumServer, ProxL1Server,
+                                 SERVERS, SGDServer, ServerOptimizer,
+                                 make_server)
+from repro.engine.rounds import (comm_counter_updates, lag_round,
+                                 policy_rounds, sum_reduce)
+from repro.engine.report import RunReport
+from repro.engine.topology import (BatchShards, PodMesh, SimWorkers,
+                                   TOPOLOGIES, Topology, make_topology,
+                                   split_batch)
+from repro.engine.experiment import Experiment
+
+# re-exported for one-stop spec building (the policy axis lives in
+# repro.comm; schedules are policies)
+from repro.comm import (POLICIES, CyclicSchedule, SampledSchedule,
+                        ScheduledPolicy, make_policy)
+
+#: ``engine.round`` — the ISSUE-3 name for the shared round
+round = lag_round
+
+__all__ = [
+    "Experiment", "RunReport", "round", "lag_round", "policy_rounds",
+    "sum_reduce", "comm_counter_updates",
+    "ServerOptimizer", "SGDServer", "MomentumServer", "AdamServer",
+    "ProxL1Server", "SERVERS", "make_server",
+    "Topology", "SimWorkers", "BatchShards", "PodMesh", "TOPOLOGIES",
+    "make_topology", "split_batch",
+    "POLICIES", "make_policy", "ScheduledPolicy", "CyclicSchedule",
+    "SampledSchedule",
+]

@@ -1,0 +1,227 @@
+"""``Experiment`` — the one front door: any policy × any server × any
+topology as a config, not a new driver.
+
+    from repro.engine import Experiment
+
+    # the paper's Fig.-3 run
+    Experiment(problem=synthetic("linreg"), algo="lag-wk", steps=3000).run()
+
+    # proximal LAG on the deep trainer (new scenario: the paper's
+    # Conclusions extension, previously convex-only)
+    Experiment(model="llama3.2-1b", algo="lag-wk", server="prox-l1@1e-4",
+               steps=20, workers=4).run()
+
+    # LAG-Adam in the convex sim (new scenario: previously trainer-only)
+    Experiment(problem=prob, algo="lag-wk", server="adam", steps=200).run()
+
+    # cyclic LAQ across two lazy pods
+    Experiment(model=cfg, algo="cyc-laq@8", topology="pods:2", steps=10).run()
+
+Every run returns a :class:`repro.engine.report.RunReport` with the same
+trajectory fields (losses / comm_mask / wire bytes / -to-ε accessors)
+whether the units are convex workers, vmapped batch shards, or pods.
+Convex defaults follow the paper (α = 1/L, or 1/(M·L) for the IAG
+schedules; ξ = 1/D, 10/D for LAG-PS); deep defaults follow
+``repro.dist.TrainerConfig``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import comm as comm_lib
+from repro.core import lag
+from repro.engine.report import RunReport
+from repro.engine.server import ProxL1Server, make_server
+from repro.engine.topology import SimWorkers, make_topology
+
+
+@dataclasses.dataclass
+class Experiment:
+    """A declarative experiment spec.  Exactly one of ``problem`` (a
+    ``repro.core.convex.Problem``) or ``model`` (a ``ModelConfig`` or an
+    arch name for ``repro.configs.get_config``) selects the workload;
+    ``algo``/``server``/``topology`` are spec strings (or objects) for
+    the three composable axes.
+    """
+    # workload (exactly one)
+    problem: Optional[Any] = None
+    model: Optional[Any] = None          # ModelConfig | arch-name str
+
+    # the three axes
+    algo: str = "lag-wk"                 # policy spec → repro.comm.make_policy
+    server: Optional[Any] = None         # spec/object; None → paper default
+    topology: Optional[Any] = None       # spec/object; None → sim | shards
+
+    # shared knobs
+    steps: int = 500                     # rounds [K]
+    D: int = 10                          # iterate-lag window [D]
+    xi: Optional[float] = None           # trigger weight [ξ]; None → default
+    seed: int = 0
+    bits: int = 4                        # LAQ width (spec '@b' overrides)
+    l1: float = 0.0                      # sugar for server="prox-l1@<l1>"
+    rhs_floor: float = 0.0               # trigger-RHS floor (f32 quirk knob)
+    policy: Optional[Any] = None         # CommPolicy object override
+
+    # convex knobs
+    alpha: Optional[float] = None        # stepsize; None → 1/L (paper)
+    theta0: Optional[Any] = None
+    opt_loss: Optional[float] = None
+
+    # deep knobs
+    workers: int = 4
+    lr: float = 0.05
+    batch: int = 8
+    seq: int = 64
+    fixed_batch: bool = True             # True: one batch every round (the
+    #   paper's full-batch regime, matching the golden harness and the
+    #   convex sim); False: a fresh heterogeneous batch per step — what
+    #   the stochastic policies (lasg-wk, whose trigger differences two
+    #   gradients on the CURRENT minibatch) are actually built for
+    reduced: bool = True                 # CPU-sized arch when model is a str
+    mesh: Optional[Any] = None           # pod placement (PodMesh)
+
+    def run(self) -> RunReport:
+        if (self.problem is None) == (self.model is None):
+            raise ValueError("Experiment needs exactly one of problem= "
+                             "(convex) or model= (deep)")
+        if self.problem is not None:
+            return self._run_convex()
+        return self._run_deep()
+
+    # -- shared resolution --------------------------------------------------
+
+    def _resolve_server(self, default: str = "sgd"):
+        if self.l1 > 0.0:
+            # l1 is sugar for the prox-l1 server — refuse to silently
+            # drop it when another server source also claims the slot
+            if self.server is not None:
+                raise ValueError(
+                    f"conflicting server specs: l1={self.l1} selects "
+                    f"'prox-l1' but server={self.server!r} was also given "
+                    f"— pass one of them (e.g. server='prox-l1@{self.l1}')")
+            if self.algo in ("adam", "lag-adam"):
+                raise ValueError(
+                    f"conflicting server specs: algo={self.algo!r} selects "
+                    f"the 'adam' server but l1={self.l1} selects 'prox-l1' "
+                    f"— spell the trigger explicitly (algo='lag-wk' or "
+                    f"'gd') plus the server you want")
+            return ProxL1Server(self.l1)
+        if self.server is not None:
+            return make_server(self.server)
+        if self.algo in ("adam", "lag-adam"):
+            return make_server("adam")
+        return make_server(default)
+
+    def _resolve_policy(self, probs=None, sqnorm_fn=None):
+        if self.policy is not None:
+            policy = self.policy
+            # pre-engine semantics: the schedule came from the ALGO, the
+            # policy= override only swapped the payload — so a scheduled
+            # algo wraps a custom payload policy in its schedule
+            prefix = self.algo.split("-", 1)[0]
+            if prefix in comm_lib.SCHEDULES and not isinstance(
+                    policy, comm_lib.ScheduledPolicy):
+                policy = comm_lib.ScheduledPolicy(
+                    policy, comm_lib.SCHEDULES[prefix](probs))
+            return policy
+        return comm_lib.make_policy(self.algo, bits=self.bits, probs=probs,
+                                    sqnorm_fn=sqnorm_fn)
+
+    # -- convex -------------------------------------------------------------
+
+    def _run_convex(self) -> RunReport:
+        prob = self.problem
+        M = prob.num_workers
+        alpha = self.alpha
+        if alpha is None:
+            # paper defaults: α = 1/L, except 1/(M·L) for the one-upload-
+            # per-round IAG schedules
+            alpha = 1.0 / (M * prob.L) if "iag" in self.algo \
+                else 1.0 / prob.L
+        xi = self.xi
+        if xi is None:
+            xi = (10.0 / self.D) if self.algo == "lag-ps" else (1.0 / self.D)
+        cfg = lag.LAGConfig(
+            num_workers=M, alpha=float(alpha), D=self.D, xi=float(xi),
+            rule="ps" if "lag-ps" in self.algo else "wk",
+            rhs_floor=self.rhs_floor)
+        # num-IAG samples workers ∝ L_m (paper Sec. 4)
+        probs = prob.L_m / jnp.sum(prob.L_m) if self.algo.startswith("num-") \
+            else None
+        policy = self._resolve_policy(probs=probs)
+        server = self._resolve_server()
+        topo = make_topology(self.topology or "sim", mesh=self.mesh)
+        if not isinstance(topo, SimWorkers):
+            raise ValueError(
+                f"convex problems run on the 'sim' topology, got "
+                f"{topo.name!r} (deep topologies need model=)")
+        report = topo.run(prob, policy, server, cfg, K=self.steps,
+                          seed=self.seed, theta0=self.theta0,
+                          opt_loss=self.opt_loss)
+        report.algo = self.algo
+        return report
+
+    # -- deep ---------------------------------------------------------------
+
+    def _run_deep(self) -> RunReport:
+        # function-level: repro.dist consumes repro.engine (rounds/server/
+        # topology); importing it at module scope would close the cycle
+        from repro.configs import get_config
+        from repro.data import TokenStream, make_heterogeneous_inputs
+        from repro.dist import lag_trainer
+        from repro.models.common import ModelConfig
+
+        cfg = self.model
+        if isinstance(cfg, str):
+            cfg = get_config(cfg)
+            if self.reduced:
+                cfg = cfg.reduced()
+        if not isinstance(cfg, ModelConfig):
+            raise ValueError(f"model= must be a ModelConfig or an arch "
+                             f"name, got {type(self.model).__name__}")
+
+        topo = make_topology(self.topology or "shards", mesh=self.mesh)
+        if isinstance(topo, SimWorkers):
+            raise ValueError("deep models run on 'shards' or 'pods:N' "
+                             "topologies, not 'sim' (sim needs problem=)")
+        W = topo.units(self.workers)
+        tcfg = lag_trainer.TrainerConfig(
+            algo=self.algo, num_workers=W, lr=self.lr, D=self.D,
+            xi=self.xi if self.xi is not None else 0.1,
+            laq_bits=self.bits, rhs_floor=self.rhs_floor)
+        policy = self._resolve_policy()
+        server = self._resolve_server()
+
+        state = lag_trainer.init_state(jax.random.PRNGKey(self.seed), cfg,
+                                       tcfg, policy=policy, server=server,
+                                       topology=topo)
+        step_fn = jax.jit(lag_trainer.make_train_step(
+            cfg, tcfg, policy=policy, server=server, topology=topo,
+            schedule_seed=self.seed))
+        stream = TokenStream(vocab=cfg.vocab_size, seed=self.seed)
+
+        losses, masks, underflow = [], [], 0
+        batch = None
+        for k in range(self.steps):
+            if batch is None or not self.fixed_batch:
+                batch = make_heterogeneous_inputs(
+                    cfg, stream, k, W, self.batch, self.seq,
+                    fixed=self.fixed_batch)
+            state, m = step_fn(state, batch)
+            losses.append(float(m["loss"]))
+            masks.append(np.asarray(jax.device_get(m["comm_mask"])))
+            underflow += int(m["trigger_rhs_underflow"])
+        extras = {"trigger_rhs_underflow_rounds": underflow}
+        if "rounds_skipped" in state["lag"]:
+            extras["rounds_skipped"] = int(
+                jax.device_get(state["lag"]["rounds_skipped"]))
+        return RunReport(
+            algo=self.algo, losses=np.asarray(losses),
+            comm_mask=np.stack(masks), opt_loss=0.0,
+            bytes_per_upload=policy.wire_bytes(state["params"]),
+            server=server.name, topology=topo.name, extras=extras)

@@ -1,0 +1,147 @@
+"""THE round: encode → trigger → decode → reduce → server-update → metrics.
+
+Pre-engine, this sequence was owned three separate times — by
+``repro.core.simulate.run`` (convex scan), ``repro.dist.lag_trainer.
+make_train_step`` (vmapped deep workers) and ``repro.dist.pod_lag``
+(lax.cond pod skip) — so capabilities didn't compose across drivers.
+``lag_round`` owns it once; topologies (``repro.engine.topology``) own
+only batching/placement: they produce the stacked per-unit gradients,
+choose how the masked deltas are reduced (plain sum, or the pod
+``lax.cond`` that actually skips the collective), and hand everything
+here.  Any ``repro.comm.CommPolicy`` × any ``repro.engine.server.
+ServerOptimizer`` plugs in.
+
+State contract (the drivers' ``lag`` group, layout unchanged from the
+pre-engine trainer so checkpoints restore across the refactor):
+
+  <policy.state_keys>   per-unit mirror state, leading worker/pod dim
+  nabla                 aggregate ∇^k = Σ_m ĝ_m
+  hist                  (D,) iterate-lag ring buffer
+  comm_total            scalar upload counter
+  comm_per_worker       (W,) per-unit upload counts
+  L_m                   (W,) per-unit smoothness (PS-rule policies)
+  rounds_skipped        optional scalar — advanced when no unit uploads
+                        (the pod driver's all-quiet counter)
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm import CommPolicy, CommRound, run_round
+from repro.core import lag
+from repro.engine.server import ServerOptimizer
+
+Pytree = Any
+
+
+def comm_counter_updates(lag_state: Dict, comm: jnp.ndarray
+                         ) -> Tuple[jnp.ndarray, Dict]:
+    """(int mask, {comm_total, comm_per_worker} updates) for this round."""
+    comm_i = comm.astype(jnp.int32)
+    # sum with an explicit dtype: under jax_enable_x64 a bare int32 sum
+    # promotes to int64 and breaks the scan-carry contract
+    return comm_i, {
+        "comm_total": lag_state["comm_total"]
+        + jnp.sum(comm_i, dtype=jnp.int32),
+        "comm_per_worker": lag_state["comm_per_worker"] + comm_i,
+    }
+
+
+def policy_rounds(policy: CommPolicy, lagcfg: lag.LAGConfig, params: Pytree,
+                  grads: Pytree, lag_state: Dict,
+                  grad_at_hat: Optional[Pytree] = None,
+                  step: Optional[jnp.ndarray] = None,
+                  key: Optional[jnp.ndarray] = None):
+    """Vmap a ``CommPolicy`` over the leading worker/pod dim.
+
+    Returns (comm (W,) bool, delta stacked pytree, new policy-state dict).
+    ``step`` and ``key`` are broadcast into the per-worker ``CommRound``
+    (round index + shared per-round PRNG key) so schedule policies can
+    compute their mask; each worker additionally sees its own
+    ``worker_id`` slot.
+    """
+    W = jax.tree_util.tree_leaves(grads)[0].shape[0]
+    pst = {k: lag_state[k] for k in policy.state_keys}
+    L_arr = lag_state["L_m"] if policy.needs_L_m \
+        else jnp.zeros((W,), jnp.float32)
+    gah = grad_at_hat if grad_at_hat is not None else grads  # DCE'd if unused
+    hist = lag_state["hist"]
+    k_idx = jnp.zeros((), jnp.int32) if step is None \
+        else jnp.asarray(step, jnp.int32)
+    worker_ids = jnp.arange(W, dtype=jnp.int32)
+
+    def one_worker(g, pst_m, gah_m, lm, wid):
+        ctx = CommRound(theta=params, grad_new=g, hist=hist, cfg=lagcfg,
+                        L_m=lm, grad_at_hat=gah_m, k=k_idx, worker_id=wid,
+                        key=key)
+        return run_round(policy, ctx, pst_m)
+
+    comm, delta, new_pst = jax.vmap(one_worker)(
+        grads, pst, gah, L_arr, worker_ids)
+    return comm, delta, new_pst
+
+
+def sum_reduce(comm: jnp.ndarray, delta: Pytree) -> Pytree:
+    """Default delta reduction: plain sum over the worker dim."""
+    return jax.tree_util.tree_map(lambda d: jnp.sum(d, axis=0), delta)
+
+
+def lag_round(policy: CommPolicy, server: ServerOptimizer,
+              lagcfg: lag.LAGConfig, *, params: Pytree,
+              opt_state: Optional[Pytree], lag_state: Dict, grads: Pytree,
+              step: jnp.ndarray, grad_at_hat: Optional[Pytree] = None,
+              key: Optional[jnp.ndarray] = None,
+              reduce_fn: Optional[Callable] = None
+              ) -> Tuple[Pytree, Optional[Pytree], Dict, Dict]:
+    """One full lazy-aggregation round for every unit at once.
+
+    Returns ``(new_params, new_opt_state, new_lag_state, metrics)``.
+    ``reduce_fn(comm, delta) → sum_delta`` is the topology's hook for HOW
+    the masked deltas cross the expensive link (the pod topology wraps
+    the sum in ``lax.cond`` so quiet rounds move zero bytes); the policy
+    invariant guarantees any reduction of the exact deltas yields the
+    same trajectory.
+    """
+    comm, delta, new_pst = policy_rounds(policy, lagcfg, params, grads,
+                                         lag_state, grad_at_hat,
+                                         step=step, key=key)
+    sum_delta = (reduce_fn or sum_reduce)(comm, delta)
+
+    # server recursion (eq. 4 aggregate) + the pluggable server step
+    nabla_new = lag.tree_add(lag_state["nabla"], sum_delta)
+    new_params, new_opt = server.apply(params, opt_state, nabla_new, step,
+                                       lagcfg)
+    # iterate-lag entry from the ACTUAL movement (post-prox / post-Adam),
+    # so the trigger RHS always measures what the server really did
+    hist_new = lag.hist_push(
+        lag_state["hist"], lag.tree_sqnorm(lag.tree_sub(new_params, params)))
+
+    comm_i, counters = comm_counter_updates(lag_state, comm)
+    new_lag = dict(lag_state, nabla=nabla_new, hist=hist_new,
+                   **new_pst, **counters)
+    any_comm = jnp.any(comm)
+    if "rounds_skipped" in lag_state:
+        new_lag["rounds_skipped"] = lag_state["rounds_skipped"] \
+            + (1 - any_comm.astype(jnp.int32))
+
+    # policy-declared traffic: ONE upload of the param-shaped gradient
+    # costs wire_bytes (a trace-time constant), so totals are exact
+    # rescalings of the upload counters
+    bytes_per_upload = policy.wire_bytes(params)
+    metrics = {
+        "comm_mask": comm,
+        "comm_this_round": jnp.sum(comm_i),
+        "comm_total": new_lag["comm_total"],
+        "wire_bytes_this_round":
+            jnp.sum(comm_i).astype(jnp.float32) * bytes_per_upload,
+        "wire_bytes_total":
+            new_lag["comm_total"].astype(jnp.float32) * bytes_per_upload,
+        "trigger_rhs": lag.trigger_rhs(lag_state["hist"], lagcfg),
+        "trigger_rhs_underflow":
+            lag.rhs_underflow(lag_state["hist"], lagcfg, step),
+        "skipped_round": (~any_comm).astype(jnp.int32),
+    }
+    return new_params, new_opt, new_lag, metrics

@@ -1,0 +1,201 @@
+"""Server-side optimizers: what the parameter server DOES with the lazily
+aggregated gradient ∇^k.
+
+The LAG decomposition (encode → trigger → decode → server update) leaves
+the last stage as its own axis: the paper's eq. (4) is plain gradient
+descent on the aggregate, but nothing in the lazy recursion requires it —
+any map (θ^k, state, ∇^k) → θ^{k+1} preserves the Σ_m ĝ_m = ∇^k
+invariant, because the policies never read the server step.  Pre-engine
+this axis was owned three separate times (the convex driver hard-coded
+SGD + an inline prox branch, the deep trainer hard-coded SGD/Adam, the
+pod driver SGD only), so proximal LAG existed only on convex problems
+and Adam server steps only in the deep trainer.  ``ServerOptimizer``
+factors it once:
+
+  sgd        θ^{k+1} = θ^k − α·∇^k — the paper's eq. (4), bit-exact with
+             the old ``lag.server_update`` math
+  momentum   heavy-ball on the mean aggregate (the old ``momentum>0``
+             trainer path)
+  adam       Adam on the mean aggregate (the old ``adam``/``lag-adam``
+             trainer path; known trigger pathology — EXPERIMENTS.md)
+  prox-l1    eq. (4) followed by soft-thresholding prox_{α·λ‖·‖₁} — the
+             proximal LAG extension the paper flags in R2/Conclusions,
+             now available to EVERY driver (deep prox-l1 is a new
+             scenario; see EXPERIMENTS.md §Engine scenarios)
+
+Conventions: ``apply`` receives the SUM aggregate ∇^k = Σ_m ĝ_m and the
+trigger constants (``cfg.alpha`` is the per-sum stepsize α = lr/M, the
+same α the trigger RHS reads, so update and trigger stay mutually
+consistent).  Optimizers that precondition (momentum/adam) consume the
+MEAN aggregate with lr = α·M — the worker-count-independent data-parallel
+convention the pre-engine trainer used.  ``init`` returns None for
+stateless servers so trainer state keeps its pre-engine layout (no
+``opt`` entry ⇒ old checkpoints restore unchanged).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lag
+from repro.optim import optimizers
+
+Pytree = Any
+
+
+class ServerOptimizer:
+    """Protocol: ``init(params) → state`` / ``apply(params, state, nabla,
+    step, cfg) → (new_params, new_state)``.
+
+    ``composite_loss`` lets a server declare the objective it actually
+    minimizes (prox-l1 reports L(θ) + λ‖θ‖₁) so every driver's loss
+    metric means "the thing this run optimizes".
+    """
+    name: str = "server"
+
+    def init(self, params: Pytree) -> Optional[Pytree]:
+        return None
+
+    def apply(self, params: Pytree, opt_state: Optional[Pytree],
+              nabla: Pytree, step: jnp.ndarray, cfg: lag.LAGConfig
+              ) -> Tuple[Pytree, Optional[Pytree]]:
+        raise NotImplementedError
+
+    def composite_loss(self, loss: jnp.ndarray, params: Pytree) -> jnp.ndarray:
+        return loss
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"{type(self).__name__}(name={self.name!r})"
+
+
+class SGDServer(ServerOptimizer):
+    """The paper's eq. (4): θ^{k+1} = θ^k − α·∇^k.  Bit-exact with the
+    pre-engine ``lag.server_update`` parameter math."""
+    name = "sgd"
+
+    def apply(self, params, opt_state, nabla, step, cfg):
+        new_params = jax.tree_util.tree_map(
+            lambda t, g: t - cfg.alpha * g, params, nabla)
+        return new_params, opt_state
+
+
+class MomentumServer(ServerOptimizer):
+    """Heavy-ball SGD on the mean aggregate (lr = α·M), matching the old
+    ``TrainerConfig.momentum > 0`` path."""
+    name = "momentum"
+
+    def __init__(self, momentum: float = 0.9):
+        if not 0.0 < momentum < 1.0:
+            raise ValueError(f"momentum must be in (0, 1), got {momentum}")
+        self.momentum = momentum
+
+    def init(self, params):
+        return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    def apply(self, params, opt_state, nabla, step, cfg):
+        M = cfg.num_workers
+        opt = optimizers.sgd(cfg.alpha * M, self.momentum)
+        mean = lag.tree_scale(nabla, 1.0 / M)
+        return opt.update(mean, opt_state, params, step)
+
+
+class AdamServer(ServerOptimizer):
+    """Adam on the mean aggregate (lr = α·M) — the old ``adam``/
+    ``lag-adam`` trainer path, now available to every driver.  Combining
+    it with a LAG trigger inherits the documented α-coupling pathology
+    (EXPERIMENTS.md §Repro 'lag-adam trigger pathology')."""
+    name = "adam"
+
+    def __init__(self, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8):
+        self.b1, self.b2, self.eps = b1, b2, eps
+
+    def init(self, params):
+        return optimizers.adam(1.0, b1=self.b1, b2=self.b2).init(params)
+
+    def apply(self, params, opt_state, nabla, step, cfg):
+        M = cfg.num_workers
+        opt = optimizers.adam(cfg.alpha * M, b1=self.b1, b2=self.b2,
+                              eps=self.eps)
+        mean = lag.tree_scale(nabla, 1.0 / M)
+        return opt.update(mean, opt_state, params, step)
+
+
+class ProxL1Server(ServerOptimizer):
+    """Proximal LAG: eq. (4) then soft-thresholding at α·λ.
+
+    The reported objective becomes the composite L(θ) + λ‖θ‖₁.  The
+    engine's round pushes the iterate-lag history from the POST-prox
+    movement — bit-exact with the pre-engine ``l1 > 0`` branch of
+    ``repro.core.simulate``.
+    """
+    name = "prox-l1"
+
+    def __init__(self, l1: float = 1e-3):
+        if l1 <= 0.0:
+            raise ValueError(f"prox-l1 strength must be positive, got {l1}")
+        self.l1 = l1
+
+    def apply(self, params, opt_state, nabla, step, cfg):
+        stepped = jax.tree_util.tree_map(
+            lambda t, g: t - cfg.alpha * g, params, nabla)
+        thr = cfg.alpha * self.l1
+        new_params = jax.tree_util.tree_map(
+            lambda t: jnp.sign(t) * jnp.maximum(jnp.abs(t) - thr, 0.0),
+            stepped)
+        return new_params, opt_state
+
+    def composite_loss(self, loss, params):
+        return loss + self.l1 * sum(
+            jnp.sum(jnp.abs(l)) for l in jax.tree_util.tree_leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Registry + spec parsing
+# ---------------------------------------------------------------------------
+
+SERVERS = {
+    "sgd": SGDServer,
+    "momentum": MomentumServer,
+    "adam": AdamServer,
+    "prox-l1": ProxL1Server,
+}
+
+
+def make_server(spec, **kw) -> ServerOptimizer:
+    """Build a ``ServerOptimizer`` from a spec string (or pass one through).
+
+    Grammar: ``<name>[@<param>]`` where the optional float parameter is
+    the momentum coefficient (``"momentum@0.9"``) or the l1 strength
+    (``"prox-l1@5.0"``); ``sgd``/``adam`` take none.  Extra ``kw`` reach
+    the constructor (``make_server("adam", b1=0.8)``).
+    """
+    if isinstance(spec, ServerOptimizer):
+        return spec
+    if not isinstance(spec, str) or not spec:
+        raise ValueError(f"server spec must be a non-empty string or a "
+                         f"ServerOptimizer, got {spec!r}")
+    name, sep, param = spec.partition("@")
+    name = name.strip()
+    if name not in SERVERS:
+        raise ValueError(f"unknown server optimizer {spec!r}; known: "
+                         f"{tuple(SERVERS)} (optionally '@<float>' for "
+                         f"momentum / prox-l1)")
+    cls = SERVERS[name]
+    if sep:
+        try:
+            value = float(param)
+        except ValueError:
+            raise ValueError(
+                f"bad server spec {spec!r}: '@{param}' is not a float "
+                f"(want e.g. 'momentum@0.9' or 'prox-l1@5.0')") from None
+        if cls is MomentumServer:
+            kw.setdefault("momentum", value)
+        elif cls is ProxL1Server:
+            kw.setdefault("l1", value)
+        else:
+            raise ValueError(
+                f"bad server spec {spec!r}: {name!r} takes no '@' "
+                f"parameter (only momentum / prox-l1 do)")
+    return cls(**kw)

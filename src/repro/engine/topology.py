@@ -1,0 +1,263 @@
+"""Topologies: WHERE the lazy-aggregation units live and HOW their masked
+deltas cross the expensive link.
+
+A topology owns ONLY batching and placement — the round itself
+(encode → trigger → decode → server-update → metrics) is
+``repro.engine.rounds.lag_round`` for every backend:
+
+  SimWorkers   the paper's parameter-server simulation: units are the M
+               convex workers, the whole K-round run is one ``lax.scan``
+  BatchShards  deep trainer: units are vmapped slices of the global
+               batch (rows m·B/W:(m+1)·B/W), deltas reduced by plain sum
+  PodMesh      pod-level deployment: units are whole pods, the cross-pod
+               reduction sits inside ``lax.cond`` so all-quiet rounds
+               move ZERO bytes across the DCI link (the
+               ``repro.dist.pod_lag`` move), batch shards pinned to the
+               mesh's pod axis
+
+``make_topology("pods:2")`` parses spec strings; the deep drivers in
+``repro.dist`` consume ``place_batch``/``reduce_fn``/``extra_state``,
+the convex driver consumes ``SimWorkers.run``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lag
+from repro.engine import rounds
+from repro.engine.report import RunReport
+from repro.engine.server import ServerOptimizer
+
+Pytree = Dict
+
+
+# ---------------------------------------------------------------------------
+# Batch splitting (shared by every deep backend; re-exported by
+# repro.dist.lag_trainer for backwards compatibility)
+# ---------------------------------------------------------------------------
+
+def split_batch(batch: Dict[str, jnp.ndarray], num_workers: int) -> Dict:
+    """Reshape every leaf's batch dim into a leading worker dim.
+
+    ``(B, …) → (W, B/W, …)``; mRoPE ``positions3`` leaves carry a leading
+    3-axis, so their batch dim is axis 1 and the worker dim still lands in
+    front: ``(3, B, S) → (W, 3, B/W, S)``.  Scalars are broadcast to (W,).
+    """
+    W = num_workers
+
+    def one(path, x):
+        key = jax.tree_util.keystr(path)
+        if x.ndim == 0:
+            return jnp.broadcast_to(x, (W,))
+        b_ax = 1 if "positions3" in key else 0
+        B = x.shape[b_ax]
+        if B % W:
+            raise ValueError(f"batch dim {B} not divisible by {W} workers"
+                             f" at {key}")
+        shp = x.shape[:b_ax] + (W, B // W) + x.shape[b_ax + 1:]
+        return jnp.moveaxis(x.reshape(shp), b_ax, 0)
+
+    return jax.tree_util.tree_map_with_path(one, batch)
+
+
+# ---------------------------------------------------------------------------
+# Deep backends
+# ---------------------------------------------------------------------------
+
+class Topology:
+    """Placement contract the deep step builder consumes."""
+    name: str = "topology"
+    kind: str = "deep"                   # "deep" | "convex"
+
+    def __init__(self, num_units: Optional[int] = None, mesh=None):
+        self.num_units = num_units
+        self.mesh = mesh
+
+    def units(self, default: int) -> int:
+        """Lazy-aggregation unit count (``num_units`` wins over the
+        trainer config's worker count)."""
+        return self.num_units or default
+
+    def place_batch(self, batch: Dict, num_units: int) -> Dict:
+        """Split the global batch into per-unit shards and pin them."""
+        return split_batch(batch, num_units)
+
+    def reduce_fn(self):
+        """``(comm, delta) → sum_delta`` or None for the default sum."""
+        return None
+
+    def extra_state(self) -> Dict:
+        """Extra ``lag``-group counters this topology maintains."""
+        return {}
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"{type(self).__name__}(num_units={self.num_units})"
+
+
+class BatchShards(Topology):
+    """Vmapped batch-shard workers reduced by plain sum — the flat
+    distributed trainer (``repro.dist.lag_trainer``)."""
+    name = "shards"
+
+
+class PodMesh(Topology):
+    """Whole pods as lazy units; the cross-pod reduction only exists on
+    the ``lax.cond`` true branch, so all-quiet rounds move zero bytes
+    across the pod boundary (verified structurally by tests/test_dist.py
+    and quantitatively by ``repro.dist.hlo_analysis``)."""
+    name = "pods"
+
+    def place_batch(self, batch: Dict, num_units: int) -> Dict:
+        shards = split_batch(batch, num_units)
+        mesh = self.mesh
+        if mesh is None or "pod" not in getattr(mesh, "axis_names", ()):
+            return shards
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        def pin(x):
+            spec = P(*(("pod",) + (None,) * (x.ndim - 1)))
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, spec))
+
+        return jax.tree_util.tree_map(pin, shards)
+
+    def reduce_fn(self):
+        def cond_sum(comm, delta):
+            # THE pod-LAG move: when no pod triggered every delta is
+            # exactly zero, so the false branch returns zeros and the DCI
+            # link carries nothing.  The zeros mirror the summed DELTA's
+            # shape/dtype (LAQ payloads are float32 regardless of param
+            # dtype, and cond branches must agree).
+            return jax.lax.cond(
+                jnp.any(comm),
+                lambda d: jax.tree_util.tree_map(
+                    lambda x: jnp.sum(x, axis=0), d),
+                lambda d: jax.tree_util.tree_map(
+                    lambda x: jnp.zeros(x.shape[1:], x.dtype), d),
+                delta)
+
+        return cond_sum
+
+    def extra_state(self) -> Dict:
+        return {"rounds_skipped": jnp.zeros((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# Convex backend
+# ---------------------------------------------------------------------------
+
+class SimWorkers(Topology):
+    """The paper's Sec.-4 parameter-server simulation: full-batch
+    gradients per convex worker, the whole K-iteration run in one
+    ``lax.scan`` over :func:`repro.engine.rounds.lag_round`."""
+    name = "sim"
+    kind = "convex"
+
+    def run(self, problem, policy, server: ServerOptimizer,
+            lagcfg: lag.LAGConfig, *, K: int, seed: int = 0,
+            theta0: Optional[jnp.ndarray] = None,
+            opt_loss: Optional[float] = None) -> RunReport:
+        M, d = problem.num_workers, problem.dim
+        theta0 = jnp.zeros((d,), problem.X.dtype) if theta0 is None \
+            else theta0
+        # Initialization (paper Alg. 1/2 line 2): all workers upload at
+        # k=0 — the policy mirrors start at the exact ∇L_m(θ⁰).
+        g0 = problem.worker_grads(theta0)                  # (M, d)
+        lag_state = dict(policy.init_state(
+            g0, jnp.broadcast_to(theta0, (M, d)) if policy.needs_theta_hat
+            else None))
+        lag_state.update(
+            nabla=jnp.sum(g0, axis=0),
+            hist=lag.hist_init(lagcfg.D),
+            comm_total=jnp.zeros((), jnp.int32),
+            comm_per_worker=jnp.zeros((M,), jnp.int32),
+            L_m=problem.L_m,
+        )
+        carry0 = dict(
+            theta=theta0,
+            opt=server.init(theta0),
+            lag=lag_state,
+            key=jax.random.PRNGKey(seed),
+            k=jnp.zeros((), jnp.int32),
+        )
+
+        def step(carry, _):
+            theta = carry["theta"]
+            loss = server.composite_loss(problem.loss(theta), theta)
+            grads = problem.worker_grads(theta)            # (M, d)
+            if policy.needs_grad_at_hat:
+                gah = problem.worker_grads_at(carry["lag"]["theta_hat"])
+            else:
+                gah = None
+            if policy.needs_rng:
+                key, sub = jax.random.split(carry["key"])
+            else:
+                key, sub = carry["key"], None
+            new_theta, new_opt, new_lag, metrics = rounds.lag_round(
+                policy, server, lagcfg, params=theta, opt_state=carry["opt"],
+                lag_state=carry["lag"], grads=grads, step=carry["k"],
+                grad_at_hat=gah, key=sub)
+            new_carry = dict(theta=new_theta, opt=new_opt, lag=new_lag,
+                             key=key, k=carry["k"] + 1)
+            out = (loss, metrics["comm_mask"],
+                   metrics["trigger_rhs_underflow"])
+            return new_carry, out
+
+        _, (losses, comm_mask, underflow) = jax.jit(
+            lambda c: jax.lax.scan(step, c, None, length=K))(carry0)
+        if opt_loss is None:
+            _, opt_loss = problem.optimum()
+        return RunReport(
+            algo=policy.name, losses=np.asarray(losses),
+            comm_mask=np.asarray(comm_mask), opt_loss=float(opt_loss),
+            bytes_per_upload=policy.wire_bytes(g0[0]),
+            server=server.name, topology=self.name,
+            extras={"trigger_rhs_underflow_rounds":
+                    int(np.asarray(underflow).sum())})
+
+
+# ---------------------------------------------------------------------------
+# Registry + spec parsing
+# ---------------------------------------------------------------------------
+
+TOPOLOGIES = {
+    "sim": SimWorkers,
+    "shards": BatchShards,
+    "pods": PodMesh,
+}
+
+
+def make_topology(spec, mesh=None) -> Topology:
+    """Build a ``Topology`` from a spec string (or pass one through).
+
+    Grammar: ``<name>[:<units>]`` — ``"sim"``, ``"shards"``,
+    ``"pods:2"`` (two lazy pods).  ``mesh`` reaches placement-aware
+    backends (the pod axis pin).
+    """
+    if isinstance(spec, Topology):
+        return spec
+    if not isinstance(spec, str) or not spec:
+        raise ValueError(f"topology spec must be a non-empty string or a "
+                         f"Topology, got {spec!r}")
+    name, sep, units = spec.partition(":")
+    name = name.strip()
+    if name not in TOPOLOGIES:
+        raise ValueError(f"unknown topology {spec!r}; known: "
+                         f"{tuple(TOPOLOGIES)} (optionally ':<units>', "
+                         f"e.g. 'pods:2')")
+    n = None
+    if sep:
+        try:
+            n = int(units)
+        except ValueError:
+            raise ValueError(
+                f"bad topology spec {spec!r}: ':{units}' is not an integer "
+                f"unit count (want e.g. 'pods:2')") from None
+        if n < 1:
+            raise ValueError(f"bad topology spec {spec!r}: unit count must "
+                             f"be >= 1")
+    return TOPOLOGIES[name](num_units=n, mesh=mesh)

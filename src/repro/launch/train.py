@@ -28,7 +28,12 @@ def build_argparser():
     p = argparse.ArgumentParser(description="LAG distributed trainer")
     p.add_argument("--arch", default="llama3.2-1b")
     p.add_argument("--algo", default="lag-wk",
-                   choices=list(lag_trainer.ALGOS))
+                   help="trainer algo or any repro.comm policy spec "
+                        f"({', '.join(lag_trainer.ALGOS)}, 'laq@8', "
+                        "'cyc-iag', ...)")
+    p.add_argument("--server", default=None,
+                   help="repro.engine server-optimizer spec overriding the "
+                        "algo default (e.g. 'prox-l1@1e-4', 'momentum@0.9')")
     p.add_argument("--steps", type=int, default=100)
     p.add_argument("--batch", type=int, default=32)
     p.add_argument("--seq", type=int, default=256)
@@ -53,7 +58,8 @@ def main(argv=None):
     if args.reduced:
         cfg = cfg.reduced()
     tcfg = TrainerConfig(algo=args.algo, num_workers=args.workers,
-                         lr=args.lr, D=args.D, xi=args.xi)
+                         lr=args.lr, D=args.D, xi=args.xi,
+                         server=args.server)
     mesh = {"host": make_host_mesh,
             "prod": lambda: make_production_mesh(multi_pod=False),
             "prod2": lambda: make_production_mesh(multi_pod=True)}[args.mesh]()

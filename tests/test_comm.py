@@ -281,6 +281,80 @@ def test_trainer_pallas_comm_flag_parity(trainer_setup):
                                rtol=1e-5)
 
 
+# ---------------------------------------------------------------------------
+# Spec-string parsing + error paths (the engine's policy axis)
+# ---------------------------------------------------------------------------
+
+def test_make_policy_spec_strings():
+    assert isinstance(comm.make_policy("lasg-wk"), comm.LASGWKPolicy)
+    assert isinstance(comm.make_policy("lag-wk"), comm.LAGWKPolicy)
+    p = comm.make_policy("laq@8")
+    assert isinstance(p, comm.LAQPolicy) and p.bits == 8
+    # the '@' parameter beats the bits kwarg; the kwarg still works alone
+    assert comm.make_policy("laq@3", bits=6).bits == 3
+    assert comm.make_policy("laq", bits=6).bits == 6
+
+
+def test_make_policy_scheduled_specs():
+    p = comm.make_policy("cyc-iag")
+    assert isinstance(p, comm.ScheduledPolicy)
+    assert isinstance(p.inner, comm.GDPolicy)
+    assert isinstance(p.schedule, comm.CyclicSchedule)
+    assert not p.needs_rng
+    p = comm.make_policy("num-iag", probs=[0.25, 0.75])
+    assert isinstance(p.schedule, comm.SampledSchedule) and p.needs_rng
+    # schedules compose with ANY payload: cyclic-LAQ is one spec
+    p = comm.make_policy("cyc-laq@8")
+    assert isinstance(p.inner, comm.LAQPolicy) and p.inner.bits == 8
+    assert p.name == "cyc-laq"
+    assert p.state_keys == p.inner.state_keys     # driver contract mirrored
+
+
+def test_make_policy_unknown_algo_is_actionable():
+    with pytest.raises(ValueError, match="unknown comm policy 'sgd'"):
+        comm.make_policy("sgd")
+    with pytest.raises(ValueError, match="known algos"):
+        comm.make_policy("sgd")
+    # near-miss IAG spellings point at the schedule-prefix grammar
+    with pytest.raises(ValueError, match="cyc-iag"):
+        comm.make_policy("rand-iag")
+    with pytest.raises(ValueError, match="non-empty string"):
+        comm.make_policy("")
+
+
+def test_make_policy_bad_bits_is_actionable():
+    with pytest.raises(ValueError, match="not an integer bit width"):
+        comm.make_policy("laq@nope")
+    with pytest.raises(ValueError, match=r"bits must be in \[2, 16\]"):
+        comm.make_policy("laq@0")
+    with pytest.raises(ValueError, match="no spec parameter"):
+        comm.make_policy("lag-wk@4")
+
+
+def test_make_server_and_topology_specs():
+    from repro.engine import (AdamServer, MomentumServer, PodMesh,
+                              ProxL1Server, SGDServer, make_server,
+                              make_topology)
+    assert isinstance(make_server("sgd"), SGDServer)
+    assert make_server("momentum@0.8").momentum == 0.8
+    assert make_server("prox-l1@5.0").l1 == 5.0
+    assert isinstance(make_server("adam"), AdamServer)
+    with pytest.raises(ValueError, match="unknown server optimizer"):
+        make_server("adagrad")
+    with pytest.raises(ValueError, match="not a float"):
+        make_server("momentum@fast")
+    with pytest.raises(ValueError, match="takes no '@' parameter"):
+        make_server("sgd@0.1")
+    with pytest.raises(ValueError, match="must be positive"):
+        make_server("prox-l1@-1")
+    topo = make_topology("pods:2")
+    assert isinstance(topo, PodMesh) and topo.num_units == 2
+    with pytest.raises(ValueError, match="unknown topology"):
+        make_topology("ring")
+    with pytest.raises(ValueError, match="not an integer unit count"):
+        make_topology("pods:two")
+
+
 def test_hlo_logical_upload_bytes():
     from repro.dist import hlo_analysis
     tree = {"w": jnp.zeros((100,))}
