@@ -22,7 +22,7 @@ def main(argv=None) -> int:
     p.add_argument("--dryrun-dir", default="experiments/dryrun")
     args = p.parse_args(argv)
 
-    from benchmarks import lag_convex, lag_deep
+    from benchmarks import lag_convex, lag_deep, netsim_sweep
 
     rows, claims = [], []
     suites = [
@@ -48,6 +48,9 @@ def main(argv=None) -> int:
             K=1500 if args.quick else 3000)),
         ("engine", lambda: lag_convex.engine_scenarios(
             K=800 if args.quick else 1500)),
+        ("netsim", lambda: netsim_sweep.netsim_suite(
+            K=2000 if args.quick else 4000,
+            steps=12 if args.quick else 50)),
     ]
     for name, fn in suites:
         try:

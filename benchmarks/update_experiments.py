@@ -1,5 +1,11 @@
-"""Regenerate the §Dry-run and §Roofline tables in EXPERIMENTS.md from
-experiments/dryrun/*.json (between the <!-- ..._TABLE --> markers)."""
+"""Regenerate the machine-spliced tables in EXPERIMENTS.md (between the
+<!-- ..._TABLE --> markers, one per entry in MARKERS): §Dry-run and
+§Roofline from experiments/dryrun/*.json, §Heterogeneity & wall-clock
+from BENCH_netsim.json (``python -m benchmarks.netsim_sweep``).
+
+tools/check_docs.py cross-checks MARKERS against the markers actually
+present in EXPERIMENTS.md, so adding a table here without its marker
+there (or vice versa) fails CI's docs-integrity step."""
 from __future__ import annotations
 
 import glob
@@ -10,6 +16,9 @@ import sys
 
 sys.path.insert(0, os.path.dirname(__file__))
 from roofline import load_records, roofline_row  # noqa: E402
+
+#: every marker this script owns — the docs-integrity check's source of truth
+MARKERS = ("DRYRUN_TABLE", "ROOFLINE_TABLE", "NETSIM_TABLE")
 
 
 def dryrun_table(dryrun_dir: str) -> str:
@@ -59,6 +68,45 @@ def roofline_table_md(dryrun_dir: str) -> str:
     return markdown_table(rows) + "\n" + summary
 
 
+def _fmt(v, suffix: str = "") -> str:
+    # non-converged runs record None — render a dash, don't crash
+    return "—" if v is None else f"{v:.2f}{suffix}"
+
+
+def netsim_table(bench_path: str) -> str:
+    """BENCH_netsim.json → the §Heterogeneity & wall-clock tables."""
+    with open(bench_path) as fh:
+        rec = json.load(fh)
+    out = [f"Cluster `{rec['cluster']}`, ε = {rec['eps']:g}, "
+           f"K = {rec['K']} (`python -m benchmarks.netsim_sweep`):",
+           "",
+           "| h | L_m spread | score | GD s-to-ε (comms) "
+           "| LAG-WK s-to-ε (comms) | wall-clock advantage |",
+           "|---|---|---|---|---|---|"]
+    for r in rec["dial"]:
+        gd, wk = r["gd"], r["lag_wk"]
+        out.append(
+            f"| {r['h']:g} | {r['L_m_spread']:.2f}× "
+            f"| {r['hetero_score']:.2f} "
+            f"| {_fmt(gd['seconds'])} ({gd['comms']}) "
+            f"| {_fmt(wk['seconds'])} ({wk['comms']}) "
+            f"| **{_fmt(r['wallclock_advantage'], '×')}** |")
+    out += ["",
+            f"Async-LAG staleness sensitivity (reduced llama3.2-1b, "
+            f"lag-wk, {rec['async_steps']} steps):",
+            "",
+            "| staleness bound τ | final loss | uploads |",
+            "|---|---|---|"]
+    for r in rec["staleness"]:
+        out.append(f"| {r['staleness']} | {r['final_loss']:.4f} "
+                   f"| {r['uploads']} |")
+    n_ok = sum(1 for c in rec["claims"] if c["ok"])
+    out.append(f"\n**{n_ok}/{len(rec['claims'])} netsim claims validated** "
+               "(monotone spread, monotone wall-clock advantage, async@0 ≡ "
+               "sync).")
+    return "\n".join(out)
+
+
 def splice(md: str, marker: str, content: str) -> str:
     pat = re.compile(rf"<!-- {marker} -->.*?(?=\n## |\Z)", re.S)
     repl = f"<!-- {marker} -->\n\n{content}\n"
@@ -71,8 +119,15 @@ def main():
     dryrun_dir = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
     path = "EXPERIMENTS.md"
     md = open(path).read()
-    md = splice(md, "DRYRUN_TABLE", dryrun_table(dryrun_dir))
-    md = splice(md, "ROOFLINE_TABLE", roofline_table_md(dryrun_dir))
+    # only splice sections whose source artifacts exist — a partial run
+    # must not clobber another section's placeholder/instructions with a
+    # degenerate zero-row table
+    if os.path.isdir(dryrun_dir) and glob.glob(
+            os.path.join(dryrun_dir, "*.json")):
+        md = splice(md, "DRYRUN_TABLE", dryrun_table(dryrun_dir))
+        md = splice(md, "ROOFLINE_TABLE", roofline_table_md(dryrun_dir))
+    if os.path.exists("BENCH_netsim.json"):
+        md = splice(md, "NETSIM_TABLE", netsim_table("BENCH_netsim.json"))
     open(path, "w").write(md)
     print("EXPERIMENTS.md tables updated")
 

@@ -157,6 +157,19 @@ class CommPolicy:
         return float(sum(l.size * jnp.dtype(l.dtype).itemsize
                          for l in jax.tree_util.tree_leaves(grad_like)))
 
+    def transfer_seconds(self, grad_like: Pytree, link) -> float:
+        """Seconds ONE triggered upload spends alone on ``link`` — a
+        convenience for costing a single upload in isolation.  ``link``
+        is anything with ``transfer_seconds(nbytes)``
+        (``repro.netsim.cluster.Link``).  The batch pricer
+        (``repro.netsim.cluster.price_mask``) does NOT call this — it
+        consumes the same policy-declared :meth:`wire_bytes` via
+        ``RunReport.bytes_per_upload`` and additionally models ingress
+        contention (transfers serialize at ``min(uplink, server NIC)``
+        rate) — but both views share ``wire_bytes``, so quantized
+        policies' byte savings carry into seconds either way."""
+        return float(link.transfer_seconds(self.wire_bytes(grad_like)))
+
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return f"{type(self).__name__}(name={self.name!r})"
 

@@ -1,11 +1,16 @@
-"""Parameter-server simulation driver for lazy-communication policies.
+"""Parameter-server simulation driver — a THIN SHIM over the engine.
 
-DEPRECATION SHIM: since the ``repro.engine`` redesign this module is a
-thin consumer of :class:`repro.engine.Experiment` — the signature and
-trajectory of :func:`run` are unchanged (bit-exact, pinned by
-tests/golden/), but new code should go through the engine front door,
-which additionally composes server optimizers (``server="adam"``,
-``"prox-l1@5.0"``) and topologies.
+This module owns no round logic: :func:`run` forwards to
+:class:`repro.engine.Experiment`, whose convex path
+(``repro.engine.topology.SimWorkers.run``) drives the one shared round
+:func:`repro.engine.rounds.lag_round` — encode → trigger → decode →
+reduce → server-update → metrics — inside a single ``lax.scan``.  The
+pre-engine signature and trajectory of :func:`run` are unchanged
+(bit-exact, pinned by tests/golden/); new code should call the engine
+front door directly, which additionally composes server optimizers
+(``server="adam"``, ``"prox-l1@5.0"``), topologies, and the
+``repro.netsim`` cluster pricing (``cluster="hetero:9@10ms/1Gbps"``).
+docs/ARCHITECTURE.md has the layer map and a walkthrough of one round.
 
 Runs the paper's Sec.-4 experiments: full-batch distributed optimization
 of a ``repro.core.convex.Problem`` under one of

@@ -5,6 +5,11 @@ datasets: a seeded Markov-ish token stream so the model has structure to
 learn (next-token loss decreases), deterministic per (seed, step, worker)
 so the distributed trainer's workers draw disjoint shards reproducibly —
 the property the LAG worker heterogeneity experiments rely on.
+
+Worker-shard heterogeneity is a *dial* now: the per-worker noise ramp
+lives in ``repro.netsim.hetero`` (``shard_noise_levels`` /
+``hetero_inputs``) and :func:`make_heterogeneous_inputs` is its h = 1
+compatibility wrapper — see docs/ARCHITECTURE.md §netsim.
 """
 from __future__ import annotations
 
@@ -77,26 +82,23 @@ def make_inputs(cfg: ModelConfig, stream: TokenStream, step: int,
 def make_heterogeneous_inputs(cfg: ModelConfig, stream: TokenStream,
                               step: int, num_workers: int, batch: int,
                               seq: int, *, fixed: bool = True,
-                              noise_lo: float = 0.01, noise_hi: float = 0.4
-                              ) -> dict:
+                              noise_lo: float = 0.01, noise_hi: float = 0.4,
+                              h: float = 1.0) -> dict:
     """Global batch whose worker shards (rows m·B/W:(m+1)·B/W, matching
-    ``repro.dist.lag_trainer.split_batch``) have *heterogeneous
-    predictability* —
-    worker m's stream has noise level interpolating noise_lo→noise_hi.
-    More-predictable shards ⇒ flatter per-worker loss ⇒ smaller effective
-    L_m — the heterogeneity LAG exploits (paper Lemma 4).  ``fixed=True``
-    reuses step 0's data every round (the paper's full-batch regime)."""
-    W = num_workers
-    per = batch // W
-    eff_step = 0 if fixed else step
-    shards = []
-    for m in range(W):
-        noise = noise_lo + (noise_hi - noise_lo) * m / max(W - 1, 1)
-        toks = stream.batch(eff_step, m, per, seq + 1, noise=noise)
-        shards.append(toks)
-    toks = np.concatenate(shards, axis=0)
-    tokens, targets = toks[:, :-1], toks[:, 1:]
-    return {"tokens": jnp.asarray(tokens), "targets": jnp.asarray(targets)}
+    ``repro.engine.topology.split_batch``) have *heterogeneous
+    predictability* — worker m's stream noise sits at heterogeneity-dial
+    position ``h`` of the noise_lo→noise_hi ramp.  More-predictable
+    shards ⇒ flatter per-worker loss ⇒ smaller effective L_m — the
+    heterogeneity LAG exploits (paper Lemma 4).
+
+    Thin wrapper over :func:`repro.netsim.hetero.hetero_inputs` (the
+    dial's home); the default ``h = 1.0`` reproduces the historical full
+    ramp BIT-exactly (the tests/golden/ harness depends on it), ``h = 0``
+    collapses every worker onto the ramp midpoint.  ``fixed=True`` reuses
+    step 0's data every round (the paper's full-batch regime)."""
+    from repro.netsim.hetero import hetero_inputs   # lazy: data ↛ netsim
+    return hetero_inputs(cfg, stream, step, num_workers, batch, seq, h=h,
+                         fixed=fixed, noise_lo=noise_lo, noise_hi=noise_hi)
 
 
 def lm_batches(cfg: ModelConfig, *, batch: int, seq: int, seed: int = 0,

@@ -1,14 +1,28 @@
-"""Distributed LAG trainer: lazy-communication policies inside a real
-deep-learning training step.
+"""Distributed LAG trainer — a THIN SHIM over the shared engine round.
 
-A "worker" here is a slice of the global batch (rows ``m·B/W:(m+1)·B/W``,
-the layout ``repro.data.make_heterogeneous_inputs`` produces).  Every step
-computes all W per-worker gradients in one vmapped backward pass and hands
-the whole round — encode → trigger → decode → reduce → server update →
-metrics — to :func:`repro.engine.rounds.lag_round`.  This module owns only
-the deep-specific parts: batch splitting/placement (via a
-``repro.engine.topology`` backend), the vmapped backward pass(es), and
-the loss metric.  Algorithm choice is one config switch:
+This module owns NO algorithm logic: every step hands the whole round —
+encode → trigger → decode → reduce → server-update → metrics — to
+:func:`repro.engine.rounds.lag_round`, exactly like the convex driver
+(``repro.core.simulate`` via ``repro.engine.topology.SimWorkers.run``)
+and the pod driver (``repro.dist.pod_lag``).  What lives HERE is only
+the deep-specific glue the engine delegates back out:
+
+  * batch splitting/placement and delta reduction, via a
+    ``repro.engine.topology`` backend (``BatchShards`` flat vmap,
+    ``PodMesh`` lax.cond skip, ``AsyncShards`` bounded-staleness views);
+  * the vmapped backward pass(es) — at the shared θ^k, at each worker's
+    stale view θ^{k−s_m} (async), and at θ̂_m for LASG-WK's trigger;
+  * the loss metric and the ``TrainerConfig`` → (policy, server, LAGConfig)
+    spec resolution.
+
+A "worker" is a slice of the global batch (rows ``m·B/W:(m+1)·B/W``, the
+layout ``repro.data.make_heterogeneous_inputs`` produces — heterogeneity
+dialable via ``repro.netsim.hetero``).  New code should prefer the
+``repro.engine.Experiment`` front door (docs/ARCHITECTURE.md has the
+layer map and a walkthrough of one round); this module keeps the
+pre-engine ``init_state``/``make_train_step`` signatures alive,
+golden-pinned by tests/golden/lag_wk_50step.json.  Algorithm choice is
+one config switch:
 
   gd        every worker uploads every round (synchronous baseline)
   lag-wk    LAG with the worker-side trigger (15a)
@@ -187,7 +201,7 @@ def init_state(key, cfg: ModelConfig, tcfg: TrainerConfig,
         # (paper: α = 1/L)
         lag_state["L_m"] = jnp.full((W,), 1.0 / tcfg.lr, jnp.float32)
     if topology is not None:
-        lag_state.update(topology.extra_state())
+        lag_state.update(topology.extra_state(params))
 
     state = {"params": params, "lag": lag_state,
              "step": jnp.zeros((), jnp.int32)}
@@ -208,8 +222,10 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainerConfig,
 
     ``policy``/``server``/``topology`` default to what ``tcfg`` selects /
     the flat ``BatchShards`` backend; ``repro.dist.pod_lag`` passes the
-    ``PodMesh`` topology instead — the round itself is
-    ``repro.engine.rounds.lag_round`` either way.  ``schedule_seed``
+    ``PodMesh`` topology instead, and ``AsyncShards`` (spec
+    ``"async:4@2"``) swaps in bounded-staleness per-worker parameter
+    views — the round itself is ``repro.engine.rounds.lag_round`` every
+    time.  ``schedule_seed``
     seeds the per-round keys of stochastic schedule policies (num-IAG);
     it is deterministic in the step counter, so no RNG state needs
     checkpointing.
@@ -227,9 +243,18 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainerConfig,
         lagcfg = tcfg.lag_config(num_units=W)
         shards = topology.place_batch(batch, W)
 
-        losses, grads = jax.vmap(
-            lambda b: jax.value_and_grad(
-                lambda p: model.loss_fn(p, cfg, b))(params))(shards)
+        # async topologies hand each worker the params it LAST SAW
+        # (θ^{k−s_m}); sync topologies return None and every worker's
+        # backward pass runs at the shared θ^k — a trace-time branch
+        views = topology.worker_views(params, lag_state, W)
+        if views is None:
+            losses, grads = jax.vmap(
+                lambda b: jax.value_and_grad(
+                    lambda p: model.loss_fn(p, cfg, b))(params))(shards)
+        else:
+            losses, grads = jax.vmap(
+                lambda th, b: jax.value_and_grad(
+                    lambda p: model.loss_fn(p, cfg, b))(th))(views, shards)
         loss = server.composite_loss(jnp.mean(losses), params)
 
         grad_at_hat = None
@@ -252,7 +277,10 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainerConfig,
             policy, server, lagcfg, params=params,
             opt_state=state.get("opt"), lag_state=lag_state, grads=grads,
             step=state["step"], grad_at_hat=grad_at_hat, key=key,
-            reduce_fn=reduce_fn)
+            reduce_fn=reduce_fn, theta_view=views)
+        adv = topology.advance_views(new_lag, new_params)
+        if adv:
+            new_lag = dict(new_lag, **adv)
 
         new_state = dict(state, params=new_params, lag=new_lag,
                          step=state["step"] + 1)

@@ -11,13 +11,18 @@ boundary (verified structurally by ``tests/test_dist.py``, which checks for
 an all-reduce inside an HLO conditional, and quantitatively by
 ``repro.dist.hlo_analysis.collective_bytes(..., pod_size=…)``).
 
-Since the ``repro.engine`` redesign this module is a thin consumer: the
+THIN SHIM over the engine: this module owns no round logic.  The
 ``lax.cond`` reduce and the pod-axis batch pinning live in
-``repro.engine.topology.PodMesh``, and the step is the same
-``repro.dist.lag_trainer.make_train_step`` every other topology uses —
-one shared ``engine`` round, so any policy × any server optimizer plugs
-in (pod-LAQ shrinks the bytes a NON-quiet round moves; a ``prox-l1``
-server gives proximal pod-LAG).
+``repro.engine.topology.PodMesh``; the step builder is the same
+``repro.dist.lag_trainer.make_train_step`` every topology uses, and the
+round it hands each batch to is :func:`repro.engine.rounds.lag_round` —
+encode → trigger → decode → (conditional) reduce → server-update →
+metrics, identical for convex workers, batch shards and pods (see
+docs/ARCHITECTURE.md for the walkthrough).  Any ``repro.comm`` policy ×
+any ``repro.engine.server`` optimizer plugs in: pod-LAQ shrinks the
+bytes a NON-quiet round moves, a ``prox-l1`` server gives proximal
+pod-LAG, and ``repro.netsim.cluster`` prices the resulting upload mask
+in simulated wall-clock.
 
 The trajectory is bit-identical to running the unconditional reduction:
 when no pod triggers, every delta is exactly zero, so skipping the

@@ -7,7 +7,14 @@ its own registry and spec grammar:
   WHO uploads WHAT     ``repro.comm.CommPolicy``      make_policy("laq@8")
   WHEN (scheduled)     ``repro.comm.ScheduledPolicy`` make_policy("cyc-iag")
   server step          ``engine.server``              make_server("prox-l1@5.0")
-  unit placement       ``engine.topology``            make_topology("pods:2")
+  unit placement       ``engine.topology``            make_topology("pods:2",
+                       (sync, pod-skip, or bounded-     "async:4@2")
+                       staleness async)
+
+plus the orthogonal ``repro.netsim`` layer: ``Experiment(cluster=
+"hetero:9@10ms/1Gbps")`` prices any run's upload mask through an
+event-driven network cost model (simulated wall-clock in ``RunReport``),
+and ``repro.netsim.hetero`` dials the workload's data heterogeneity.
 
 ``engine.round`` (:func:`repro.engine.rounds.lag_round`) owns the shared
 encode → trigger → decode → reduce → server-update → metrics sequence;
@@ -18,6 +25,8 @@ declarative front door is :class:`Experiment` → :class:`RunReport`:
     from repro.engine import Experiment
     r = Experiment(problem=prob, algo="lag-wk", steps=3000).run()
     r.comms_to(1e-8), r.bytes_to(1e-8)
+
+docs/ARCHITECTURE.md maps the layers and walks one round end to end.
 """
 from repro.engine.server import (AdamServer, MomentumServer, ProxL1Server,
                                  SERVERS, SGDServer, ServerOptimizer,
@@ -25,9 +34,9 @@ from repro.engine.server import (AdamServer, MomentumServer, ProxL1Server,
 from repro.engine.rounds import (comm_counter_updates, lag_round,
                                  policy_rounds, sum_reduce)
 from repro.engine.report import RunReport
-from repro.engine.topology import (BatchShards, PodMesh, SimWorkers,
-                                   TOPOLOGIES, Topology, make_topology,
-                                   split_batch)
+from repro.engine.topology import (AsyncShards, BatchShards, PodMesh,
+                                   SimWorkers, TOPOLOGIES, Topology,
+                                   make_topology, split_batch)
 from repro.engine.experiment import Experiment
 
 # re-exported for one-stop spec building (the policy axis lives in
@@ -43,8 +52,8 @@ __all__ = [
     "sum_reduce", "comm_counter_updates",
     "ServerOptimizer", "SGDServer", "MomentumServer", "AdamServer",
     "ProxL1Server", "SERVERS", "make_server",
-    "Topology", "SimWorkers", "BatchShards", "PodMesh", "TOPOLOGIES",
-    "make_topology", "split_batch",
+    "Topology", "SimWorkers", "BatchShards", "PodMesh", "AsyncShards",
+    "TOPOLOGIES", "make_topology", "split_batch",
     "POLICIES", "make_policy", "ScheduledPolicy", "CyclicSchedule",
     "SampledSchedule",
 ]

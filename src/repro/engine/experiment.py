@@ -17,6 +17,14 @@ topology as a config, not a new driver.
     # cyclic LAQ across two lazy pods
     Experiment(model=cfg, algo="cyc-laq@8", topology="pods:2", steps=10).run()
 
+    # netsim: a dialed-heterogeneity problem priced on a simulated
+    # network — the report gains seconds_to(eps)/wall_seconds
+    Experiment(problem=hetero_problem("linreg", h=0.8), algo="lag-wk",
+               steps=1000, cluster="hetero:9@10ms/1Gbps").run()
+
+    # bounded-staleness async LAG (slowest worker 2 rounds behind)
+    Experiment(model=cfg, algo="lag-wk", topology="async:4@2", steps=20).run()
+
 Every run returns a :class:`repro.engine.report.RunReport` with the same
 trajectory fields (losses / comm_mask / wire bytes / -to-ε accessors)
 whether the units are convex workers, vmapped batch shards, or pods.
@@ -66,6 +74,9 @@ class Experiment:
     l1: float = 0.0                      # sugar for server="prox-l1@<l1>"
     rhs_floor: float = 0.0               # trigger-RHS floor (f32 quirk knob)
     policy: Optional[Any] = None         # CommPolicy object override
+    cluster: Optional[Any] = None        # repro.netsim cluster spec/object;
+    #   when set, the run is priced through the event-driven cost model and
+    #   the report gains round_seconds / wall_seconds / seconds_to(eps)
 
     # convex knobs
     alpha: Optional[float] = None        # stepsize; None → 1/L (paper)
@@ -77,6 +88,10 @@ class Experiment:
     lr: float = 0.05
     batch: int = 8
     seq: int = 64
+    hetero: Optional[float] = None       # deep heterogeneity dial h ∈ [0, 1]
+    #   for the worker shards (repro.netsim.hetero); None → the historical
+    #   full ramp (h = 1).  Convex heterogeneity is a property of the
+    #   Problem — build one with repro.netsim.hetero_problem(h=...)
     fixed_batch: bool = True             # True: one batch every round (the
     #   paper's full-batch regime, matching the golden harness and the
     #   convex sim); False: a fresh heterogeneous batch per step — what
@@ -90,8 +105,24 @@ class Experiment:
             raise ValueError("Experiment needs exactly one of problem= "
                              "(convex) or model= (deep)")
         if self.problem is not None:
-            return self._run_convex()
-        return self._run_deep()
+            if self.hetero is not None:
+                raise ValueError(
+                    "hetero= is the DEEP shard dial; convex heterogeneity "
+                    "is a property of the Problem — build one with "
+                    "repro.netsim.hetero_problem(h=...)")
+            report, dense = self._run_convex(), \
+                float(self.problem.dim
+                      * jnp.dtype(self.problem.X.dtype).itemsize)
+        else:
+            report, dense = self._run_deep()
+        if self.cluster is not None:
+            # price the upload mask through the event-driven cost model;
+            # the broadcast moves DENSE params even when uploads are
+            # quantized, so it is sized separately from bytes_per_upload
+            from repro.netsim import cluster as netsim_cluster
+            netsim_cluster.price_report(report, self.cluster,
+                                        dense_bytes=dense)
+        return report
 
     # -- shared resolution --------------------------------------------------
 
@@ -207,21 +238,28 @@ class Experiment:
 
         losses, masks, underflow = [], [], 0
         batch = None
+        h = 1.0 if self.hetero is None else self.hetero
         for k in range(self.steps):
             if batch is None or not self.fixed_batch:
                 batch = make_heterogeneous_inputs(
                     cfg, stream, k, W, self.batch, self.seq,
-                    fixed=self.fixed_batch)
+                    fixed=self.fixed_batch, h=h)
             state, m = step_fn(state, batch)
             losses.append(float(m["loss"]))
             masks.append(np.asarray(jax.device_get(m["comm_mask"])))
             underflow += int(m["trigger_rhs_underflow"])
         extras = {"trigger_rhs_underflow_rounds": underflow}
+        if self.hetero is not None:
+            extras["hetero_dial"] = float(self.hetero)
         if "rounds_skipped" in state["lag"]:
             extras["rounds_skipped"] = int(
                 jax.device_get(state["lag"]["rounds_skipped"]))
+        dense_bytes = float(sum(
+            l.size * jnp.dtype(l.dtype).itemsize
+            for l in jax.tree_util.tree_leaves(state["params"])))
         return RunReport(
             algo=self.algo, losses=np.asarray(losses),
             comm_mask=np.stack(masks), opt_loss=0.0,
             bytes_per_upload=policy.wire_bytes(state["params"]),
-            server=server.name, topology=topo.name, extras=extras)
+            server=server.name, topology=topo.name,
+            extras=extras), dense_bytes

@@ -12,6 +12,13 @@ For convex runs ``opt_loss`` is the reference optimum and ``iters_to``
 measures the optimality gap; deep runs have no oracle optimum, so
 ``opt_loss`` defaults to 0.0 and the ε-accessors measure the raw loss —
 state that explicitly when reporting deep numbers.
+
+Simulated wall-clock (the ``repro.netsim`` axis): when a run is priced
+against a cluster cost model — ``Experiment(cluster="hetero:9@10ms/
+1Gbps")`` or ``repro.netsim.cluster.price_report`` — ``round_seconds``
+holds the event-driven per-round times and the time accessors
+(``wall_seconds``, ``cum_seconds``, ``seconds_to``) come alive;
+unpriced reports raise an actionable error instead of guessing.
 """
 from __future__ import annotations
 
@@ -32,7 +39,10 @@ class RunReport:
     topology: str = "sim"
     extras: Dict = dataclasses.field(default_factory=dict)
     # extras: driver-specific scalars (e.g. rounds_skipped,
-    # trigger_rhs_underflow_rounds, wall_s)
+    # trigger_rhs_underflow_rounds, L_m_spread, hetero_score, cluster,
+    # wall_seconds)
+    round_seconds: Optional[np.ndarray] = None   # (K,) simulated seconds
+    #   per round — filled by repro.netsim.cluster.price_report
 
     @property
     def num_units(self) -> int:
@@ -65,6 +75,34 @@ class RunReport:
         """Total policy-declared wire bytes over the whole run."""
         return float(self.total_comms * self.bytes_per_upload)
 
+    # -- simulated wall-clock (repro.netsim pricing) ------------------------
+
+    def _priced(self) -> np.ndarray:
+        if self.round_seconds is None:
+            raise ValueError(
+                "this report has no simulated wall-clock — run with "
+                "Experiment(cluster=\"hetero:9@10ms/1Gbps\") or price it "
+                "with repro.netsim.cluster.price_report(report, cluster)")
+        return np.asarray(self.round_seconds)
+
+    @property
+    def cum_seconds(self) -> np.ndarray:
+        """(K,) cumulative simulated seconds under the priced cluster."""
+        return np.cumsum(self._priced())
+
+    @property
+    def wall_seconds(self) -> float:
+        """Total simulated wall-clock of the whole run."""
+        return float(self._priced().sum())
+
+    def seconds_to(self, eps: float) -> Optional[float]:
+        """Simulated seconds to the ε optimality gap (the axis the paper's
+        motivation lives on: skipped uploads → wall-clock, not just
+        rounds)."""
+        cum = np.cumsum(self._priced())   # raise on unpriced reports even
+        k = self.iters_to(eps)            # when the run never converged
+        return float(cum[k]) if k is not None else None
+
     def iters_to(self, eps: float) -> Optional[int]:
         err = self.losses - self.opt_loss
         hit = np.nonzero(err <= eps)[0]
@@ -92,5 +130,7 @@ class RunReport:
             row.update(iters_to_eps=self.iters_to(eps),
                        comms_to_eps=self.comms_to(eps),
                        bytes_to_eps=self.bytes_to(eps))
+            if self.round_seconds is not None:
+                row.update(seconds_to_eps=self.seconds_to(eps))
         row.update(self.extras)
         return row

@@ -54,7 +54,8 @@ def policy_rounds(policy: CommPolicy, lagcfg: lag.LAGConfig, params: Pytree,
                   grads: Pytree, lag_state: Dict,
                   grad_at_hat: Optional[Pytree] = None,
                   step: Optional[jnp.ndarray] = None,
-                  key: Optional[jnp.ndarray] = None):
+                  key: Optional[jnp.ndarray] = None,
+                  theta_view: Optional[Pytree] = None):
     """Vmap a ``CommPolicy`` over the leading worker/pod dim.
 
     Returns (comm (W,) bool, delta stacked pytree, new policy-state dict).
@@ -62,6 +63,14 @@ def policy_rounds(policy: CommPolicy, lagcfg: lag.LAGConfig, params: Pytree,
     (round index + shared per-round PRNG key) so schedule policies can
     compute their mask; each worker additionally sees its own
     ``worker_id`` slot.
+
+    ``theta_view`` (stacked (W, …), optional) is the bounded-staleness
+    hook: when an async topology hands each worker the parameters it
+    LAST SAW (θ^{k−s_m}), the per-worker ``CommRound.theta`` becomes that
+    view, so triggers and mirror-state updates (the PS rule's θ̂ compare,
+    ``decode``'s θ̂ refresh) are evaluated against the worker's own stale
+    iterate — not the server's current one.  None (default, every sync
+    topology) broadcasts the shared ``params``.
     """
     W = jax.tree_util.tree_leaves(grads)[0].shape[0]
     pst = {k: lag_state[k] for k in policy.state_keys}
@@ -73,14 +82,19 @@ def policy_rounds(policy: CommPolicy, lagcfg: lag.LAGConfig, params: Pytree,
         else jnp.asarray(step, jnp.int32)
     worker_ids = jnp.arange(W, dtype=jnp.int32)
 
-    def one_worker(g, pst_m, gah_m, lm, wid):
-        ctx = CommRound(theta=params, grad_new=g, hist=hist, cfg=lagcfg,
+    def one_worker(g, pst_m, gah_m, lm, wid, theta_m):
+        ctx = CommRound(theta=theta_m, grad_new=g, hist=hist, cfg=lagcfg,
                         L_m=lm, grad_at_hat=gah_m, k=k_idx, worker_id=wid,
                         key=key)
         return run_round(policy, ctx, pst_m)
 
-    comm, delta, new_pst = jax.vmap(one_worker)(
-        grads, pst, gah, L_arr, worker_ids)
+    if theta_view is None:
+        comm, delta, new_pst = jax.vmap(
+            one_worker, in_axes=(0, 0, 0, 0, 0, None))(
+            grads, pst, gah, L_arr, worker_ids, params)
+    else:
+        comm, delta, new_pst = jax.vmap(one_worker)(
+            grads, pst, gah, L_arr, worker_ids, theta_view)
     return comm, delta, new_pst
 
 
@@ -94,7 +108,8 @@ def lag_round(policy: CommPolicy, server: ServerOptimizer,
               opt_state: Optional[Pytree], lag_state: Dict, grads: Pytree,
               step: jnp.ndarray, grad_at_hat: Optional[Pytree] = None,
               key: Optional[jnp.ndarray] = None,
-              reduce_fn: Optional[Callable] = None
+              reduce_fn: Optional[Callable] = None,
+              theta_view: Optional[Pytree] = None
               ) -> Tuple[Pytree, Optional[Pytree], Dict, Dict]:
     """One full lazy-aggregation round for every unit at once.
 
@@ -104,10 +119,19 @@ def lag_round(policy: CommPolicy, server: ServerOptimizer,
     the sum in ``lax.cond`` so quiet rounds move zero bytes); the policy
     invariant guarantees any reduction of the exact deltas yields the
     same trajectory.
+
+    ``theta_view`` is the async topology's bounded-staleness hook (see
+    :func:`policy_rounds`): per-worker stale iterates the triggers are
+    evaluated against.  The server step, the aggregate ∇^k recursion and
+    the iterate-lag history all stay SERVER-side (they measure what the
+    server actually did to the shared θ), so staleness only enters
+    through the workers' gradients/triggers — at staleness 0 the round
+    is bit-exact with the sync path.
     """
     comm, delta, new_pst = policy_rounds(policy, lagcfg, params, grads,
                                          lag_state, grad_at_hat,
-                                         step=step, key=key)
+                                         step=step, key=key,
+                                         theta_view=theta_view)
     sum_delta = (reduce_fn or sum_reduce)(comm, delta)
 
     # server recursion (eq. 4 aggregate) + the pluggable server step

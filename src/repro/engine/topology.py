@@ -14,10 +14,19 @@ A topology owns ONLY batching and placement — the round itself
                move ZERO bytes across the DCI link (the
                ``repro.dist.pod_lag`` move), batch shards pinned to the
                mesh's pod axis
+  AsyncShards  bounded-staleness batch shards (async LAG): worker m
+               computes its gradient — and evaluates its trigger —
+               against θ^{k−s_m}, the parameters it last saw, via a
+               (τ+1)-deep parameter ring in the lag state; staleness 0
+               is bit-exact with ``BatchShards`` (pinned by
+               tests/test_netsim.py against tests/golden/)
 
-``make_topology("pods:2")`` parses spec strings; the deep drivers in
-``repro.dist`` consume ``place_batch``/``reduce_fn``/``extra_state``,
-the convex driver consumes ``SimWorkers.run``.
+``make_topology("pods:2")`` / ``make_topology("async:4@2")`` parse spec
+strings; the deep drivers in ``repro.dist`` consume ``place_batch`` /
+``reduce_fn`` / ``extra_state`` / ``worker_views`` / ``advance_views``,
+the convex driver consumes ``SimWorkers.run``.  Simulated wall-clock for
+any topology's upload mask comes from ``repro.netsim.cluster`` (see
+docs/ARCHITECTURE.md §netsim).
 """
 from __future__ import annotations
 
@@ -90,8 +99,22 @@ class Topology:
         """``(comm, delta) → sum_delta`` or None for the default sum."""
         return None
 
-    def extra_state(self) -> Dict:
-        """Extra ``lag``-group counters this topology maintains."""
+    def extra_state(self, params=None) -> Dict:
+        """Extra ``lag``-group state this topology maintains (counters,
+        the async parameter ring — sized from ``params``)."""
+        return {}
+
+    def worker_views(self, params, lag_state: Dict, num_units: int):
+        """Stacked (W, …) per-worker parameter views, or None when every
+        worker sees the server's current θ^k (the sync topologies).
+        Async backends return each worker's stale view θ^{k−s_m}; the
+        step builder computes gradients — and the engine evaluates
+        triggers — against it."""
+        return None
+
+    def advance_views(self, lag_state: Dict, new_params) -> Dict:
+        """Post-round ``lag``-state updates for the view machinery (the
+        async ring push).  Returns a dict merged into the new lag state."""
         return {}
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
@@ -142,8 +165,72 @@ class PodMesh(Topology):
 
         return cond_sum
 
-    def extra_state(self) -> Dict:
+    def extra_state(self, params=None) -> Dict:
         return {"rounds_skipped": jnp.zeros((), jnp.int32)}
+
+
+class AsyncShards(Topology):
+    """Bounded-staleness async LAG: slow workers trigger on the
+    parameters they LAST SAW.
+
+    Worker m's gradient and trigger are evaluated at θ^{k−s_m}, where the
+    per-worker staleness ramp ``s_m = ⌊m·τ/(W−1)⌋`` runs from 0 (fastest
+    worker, fully synchronous) to the bound τ (= ``staleness``, the
+    slowest worker) — the bulk-synchronous-with-stale-reads model of the
+    LASG line (Chen et al., 2020).  Implementation: the lag state carries
+    a (τ+1)-deep ring of past parameters (``theta_ring``, pushed by
+    :meth:`advance_views` after every server step); :meth:`worker_views`
+    gathers each worker's view, the step builder computes gradients at it
+    and ``engine.rounds.lag_round`` routes it into the per-worker
+    ``CommRound.theta`` so the PS-rule compare and the θ̂ mirror refresh
+    see the worker's own stale iterate.
+
+    The server side is untouched — aggregate ∇^k recursion, server step
+    and the iterate-lag history all measure the shared θ — so at
+    ``staleness=0`` the ring holds exactly θ^k and the trajectory is
+    BIT-exact with ``BatchShards`` (pinned against the sync golden by
+    tests/test_netsim.py).  Memory cost: (τ+1) parameter copies.
+    """
+    name = "async"
+
+    def __init__(self, num_units: Optional[int] = None, mesh=None,
+                 staleness: int = 1):
+        super().__init__(num_units, mesh)
+        if staleness < 0:
+            raise ValueError(f"staleness bound must be >= 0, got "
+                             f"{staleness}")
+        self.staleness = int(staleness)
+
+    def stale_steps(self, num_units: int) -> np.ndarray:
+        """(W,) per-worker staleness: a 0→τ ramp over the worker index."""
+        W, tau = num_units, self.staleness
+        if W <= 1:
+            return np.full((W,), tau, np.int32)
+        return ((np.arange(W) * tau) // (W - 1)).astype(np.int32)
+
+    def extra_state(self, params=None) -> Dict:
+        if params is None:
+            raise ValueError("AsyncShards.extra_state needs params to size "
+                             "the staleness ring")
+        depth = self.staleness + 1
+        ring = jax.tree_util.tree_map(
+            lambda p: jnp.stack([p] * depth), params)
+        return {"theta_ring": ring}
+
+    def worker_views(self, params, lag_state: Dict, num_units: int):
+        idx = jnp.asarray(self.stale_steps(num_units))
+        return jax.tree_util.tree_map(lambda r: r[idx],
+                                      lag_state["theta_ring"])
+
+    def advance_views(self, lag_state: Dict, new_params) -> Dict:
+        ring = jax.tree_util.tree_map(
+            lambda r, p: jnp.concatenate([p[None].astype(r.dtype), r[:-1]]),
+            lag_state["theta_ring"], new_params)
+        return {"theta_ring": ring}
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"AsyncShards(num_units={self.num_units}, "
+                f"staleness={self.staleness})")
 
 
 # ---------------------------------------------------------------------------
@@ -211,13 +298,22 @@ class SimWorkers(Topology):
             lambda c: jax.lax.scan(step, c, None, length=K))(carry0)
         if opt_loss is None:
             _, opt_loss = problem.optimum()
+        # the netsim measurables (paper Sec. 3): realized smoothness
+        # spread + the trigger-derived heterogeneity score, so every
+        # convex report carries the dial position it actually ran at
+        from repro.netsim import hetero as netsim_hetero
+        extras = {
+            "trigger_rhs_underflow_rounds": int(np.asarray(underflow).sum()),
+            "L_m_spread": netsim_hetero.realized_spread(problem.L_m),
+            "hetero_score": netsim_hetero.hetero_score(
+                problem.L_m, alpha=lagcfg.alpha, xi=lagcfg.xi, D=lagcfg.D,
+                num_workers=M),
+        }
         return RunReport(
             algo=policy.name, losses=np.asarray(losses),
             comm_mask=np.asarray(comm_mask), opt_loss=float(opt_loss),
             bytes_per_upload=policy.wire_bytes(g0[0]),
-            server=server.name, topology=self.name,
-            extras={"trigger_rhs_underflow_rounds":
-                    int(np.asarray(underflow).sum())})
+            server=server.name, topology=self.name, extras=extras)
 
 
 # ---------------------------------------------------------------------------
@@ -228,14 +324,17 @@ TOPOLOGIES = {
     "sim": SimWorkers,
     "shards": BatchShards,
     "pods": PodMesh,
+    "async": AsyncShards,
 }
 
 
 def make_topology(spec, mesh=None) -> Topology:
     """Build a ``Topology`` from a spec string (or pass one through).
 
-    Grammar: ``<name>[:<units>]`` — ``"sim"``, ``"shards"``,
-    ``"pods:2"`` (two lazy pods).  ``mesh`` reaches placement-aware
+    Grammar: ``<name>[:<units>][@<staleness>]`` — ``"sim"``,
+    ``"shards"``, ``"pods:2"`` (two lazy pods), ``"async:4@2"`` (four
+    bounded-staleness workers, slowest 2 rounds behind; ``"async"``
+    alone defaults to staleness 1).  ``mesh`` reaches placement-aware
     backends (the pod axis pin).
     """
     if isinstance(spec, Topology):
@@ -243,12 +342,28 @@ def make_topology(spec, mesh=None) -> Topology:
     if not isinstance(spec, str) or not spec:
         raise ValueError(f"topology spec must be a non-empty string or a "
                          f"Topology, got {spec!r}")
-    name, sep, units = spec.partition(":")
+    head, sep_at, stale_s = spec.partition("@")
+    name, sep, units = head.partition(":")
     name = name.strip()
     if name not in TOPOLOGIES:
         raise ValueError(f"unknown topology {spec!r}; known: "
                          f"{tuple(TOPOLOGIES)} (optionally ':<units>', "
-                         f"e.g. 'pods:2')")
+                         f"e.g. 'pods:2'; async also takes '@<staleness>')")
+    kwargs = {}
+    if sep_at:
+        if name != "async":
+            raise ValueError(
+                f"bad topology spec {spec!r}: only 'async' takes an "
+                f"'@<staleness>' suffix (e.g. 'async:4@2')")
+        try:
+            kwargs["staleness"] = int(stale_s)
+        except ValueError:
+            raise ValueError(
+                f"bad topology spec {spec!r}: '@{stale_s}' is not an "
+                f"integer staleness bound (want e.g. 'async:4@2')") from None
+        if kwargs["staleness"] < 0:
+            raise ValueError(f"bad topology spec {spec!r}: staleness must "
+                             f"be >= 0")
     n = None
     if sep:
         try:
@@ -260,4 +375,4 @@ def make_topology(spec, mesh=None) -> Topology:
         if n < 1:
             raise ValueError(f"bad topology spec {spec!r}: unit count must "
                              f"be >= 1")
-    return TOPOLOGIES[name](num_units=n, mesh=mesh)
+    return TOPOLOGIES[name](num_units=n, mesh=mesh, **kwargs)

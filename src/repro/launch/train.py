@@ -1,10 +1,15 @@
 """Training launcher.
 
   PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \\
-      --algo lag-wk --steps 200 --batch 32 --seq 256 --workers 8
+      --algo lag-wk --steps 200 --batch 32 --seq 256 --workers 8 \\
+      --hetero 0.8 --cluster hetero:8@10ms/1Gbps
 
 Runs on whatever devices exist (1 CPU here; the TPU mesh via --mesh prod).
 Logs loss + LAG communication counters; checkpoints include LAG state.
+``--hetero`` dials the worker shards' data heterogeneity
+(``repro.netsim.hetero``), ``--cluster`` prices the run's upload mask
+through the event-driven network cost model (``repro.netsim.cluster``)
+and prints simulated wall-clock vs the GD baseline at exit.
 """
 from __future__ import annotations
 
@@ -13,11 +18,12 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import metrics as metrics_lib
 from repro.checkpoint import save, restore, latest_step
 from repro.configs import get_config
-from repro.data import TokenStream, make_inputs
+from repro.data import TokenStream, make_heterogeneous_inputs, make_inputs
 from repro.dist import (TrainerConfig, init_state, lag_trainer,
                         make_train_step, tree_shardings, batch_shardings)
 from repro.launch.mesh import (make_host_mesh, make_production_mesh,
@@ -41,6 +47,14 @@ def build_argparser():
     p.add_argument("--lr", type=float, default=0.3)
     p.add_argument("--xi", type=float, default=0.1)
     p.add_argument("--D", type=int, default=10)
+    p.add_argument("--hetero", type=float, default=None,
+                   help="worker-shard heterogeneity dial h in [0,1] "
+                        "(repro.netsim noise ramp; LM archs only); "
+                        "default: homogeneous single-stream batches")
+    p.add_argument("--cluster", default=None,
+                   help="price the run on a simulated network, e.g. "
+                        "'hetero:8@10ms/1Gbps' (repro.netsim.make_cluster "
+                        "spec; worker count must match --workers)")
     p.add_argument("--reduced", action="store_true",
                    help="CPU-sized variant of the arch")
     p.add_argument("--mesh", default="host", choices=["host", "prod", "prod2"])
@@ -63,6 +77,12 @@ def main(argv=None):
     mesh = {"host": make_host_mesh,
             "prod": lambda: make_production_mesh(multi_pod=False),
             "prod2": lambda: make_production_mesh(multi_pod=True)}[args.mesh]()
+    if args.hetero is not None and cfg.family in ("audio", "vlm"):
+        raise SystemExit(f"--hetero shards are LM-only (token-noise ramp); "
+                         f"--arch {args.arch} is family {cfg.family!r}")
+    if args.cluster is not None:
+        from repro.netsim import make_cluster
+        make_cluster(args.cluster, num_workers=args.workers)  # validate early
 
     state = init_state(jax.random.PRNGKey(args.seed), cfg, tcfg)
     start = 0
@@ -79,10 +99,18 @@ def main(argv=None):
         stream = TokenStream(vocab=cfg.vocab_size, seed=args.seed)
         log = metrics_lib.Logger(args.log)
         t0 = time.time()
+        masks = []
         for step in range(start, args.steps):
-            batch = make_inputs(cfg, stream, step, args.batch, args.seq)
+            if args.hetero is not None:
+                batch = make_heterogeneous_inputs(
+                    cfg, stream, step, args.workers, args.batch, args.seq,
+                    fixed=False, h=args.hetero)
+            else:
+                batch = make_inputs(cfg, stream, step, args.batch, args.seq)
             batch = jax.device_put(batch, batch_shardings(batch, mesh))
             state, m = step_fn(state, batch)
+            if args.cluster is not None:
+                masks.append(np.asarray(jax.device_get(m["comm_mask"])))
             if step % 10 == 0 or step == args.steps - 1:
                 log.log(step, loss=m["loss"],
                         comm_round=m["comm_this_round"],
@@ -97,6 +125,20 @@ def main(argv=None):
         print(f"done: {rounds} rounds in {dt:.1f}s | uploads {total} "
               f"vs GD {rounds * W} "
               f"({100.0 * total / max(rounds * W, 1):.1f}% of GD)")
+        if args.cluster is not None and masks:
+            from repro.netsim import make_cluster, price_mask
+            cl = make_cluster(args.cluster, num_workers=W)
+            bpu = tcfg.comm_policy().wire_bytes(state["params"])
+            dense = float(sum(
+                l.size * jnp.dtype(l.dtype).itemsize
+                for l in jax.tree_util.tree_leaves(state["params"])))
+            t_run = price_mask(np.stack(masks), bpu, cl,
+                               dense_bytes=dense).sum()
+            t_gd = price_mask(np.ones((rounds, W), bool), dense, cl,
+                              dense_bytes=dense).sum()
+            print(f"simulated wall-clock on '{args.cluster}': "
+                  f"{t_run:.2f}s vs GD {t_gd:.2f}s "
+                  f"({t_gd / max(t_run, 1e-12):.2f}x advantage)")
     return state
 
 

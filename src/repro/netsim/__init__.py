@@ -1,0 +1,46 @@
+"""``repro.netsim`` — heterogeneity dial + network cost model: the layer
+that turns the repro into a *cluster-scenario simulator*.
+
+Two orthogonal knobs the paper's claims actually live on, both absent
+from the raw round/byte counters:
+
+  data heterogeneity   ``netsim.hetero`` — convex problems and deep LM
+                       shards with a sweepable smoothness-spread dial
+                       ``h`` (Sec. 3's "measurable constants"), realized
+                       L_m spread + heterogeneity score reported in
+                       ``RunReport.extras``
+  network cost         ``netsim.cluster`` — per-link latency/bandwidth,
+                       straggler distributions, an event-driven round
+                       pricer that converts any run's upload mask into
+                       simulated wall-clock (``make_cluster(
+                       "hetero:9@10ms/1Gbps")``)
+
+Both plug into the engine front door without new drivers:
+
+    from repro.engine import Experiment
+    from repro.netsim import hetero_problem
+
+    prob = hetero_problem("linreg", h=0.8, seed=0)
+    r = Experiment(problem=prob, algo="lag-wk", steps=1000,
+                   cluster="hetero:9@10ms/1Gbps").run()
+    r.extras["L_m_spread"], r.seconds_to(1e-6), r.wall_seconds
+
+The bounded-staleness async-LAG topology this pairs with (slow workers
+trigger on the parameters they last saw) is ``repro.engine.topology.
+AsyncShards`` (``topology="async:4@2"``).  The heterogeneity sweep that
+reproduces the paper's savings-grow-with-heterogeneity trend is
+``benchmarks/netsim_sweep.py`` → ``BENCH_netsim.json``; the architecture
+walkthrough is docs/ARCHITECTURE.md.
+"""
+from repro.netsim.cluster import (CLUSTERS, Cluster, Link, make_cluster,
+                                  price_mask, price_report)
+from repro.netsim.hetero import (hetero_L_targets, hetero_inputs,
+                                 hetero_problem, hetero_score,
+                                 realized_spread, shard_noise_levels)
+
+__all__ = [
+    "Cluster", "Link", "CLUSTERS", "make_cluster", "price_mask",
+    "price_report",
+    "hetero_problem", "hetero_L_targets", "hetero_inputs", "hetero_score",
+    "realized_spread", "shard_noise_levels",
+]

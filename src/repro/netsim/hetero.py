@@ -1,0 +1,176 @@
+"""The heterogeneity dial: generate workloads whose *data heterogeneity*
+is a measurable, sweepable knob.
+
+The paper's headline theory (Sec. 3) says LAG's communication savings
+grow with the spread of the per-worker smoothness constants L_m — the
+"measurable constants" of the abstract.  Pre-netsim the repo could only
+reproduce two fixed points of that axis (Fig. 3's geometric L_m ramp and
+Fig. 4's uniform L_m); this module turns the axis into a dial ``h``:
+
+  convex   :func:`hetero_problem` — a ``repro.core.convex.Problem`` whose
+            per-worker smoothness targets ramp geometrically from uniform
+            (h = 0, the Fig.-4 regime) to the paper's Fig.-3-sized spread
+            (h = 1), with the LARGEST L_m held fixed so the stepsize
+            regime stays comparable across the dial
+  deep     :func:`hetero_inputs` / :func:`shard_noise_levels` — LM token
+            shards whose per-worker predictability-noise interpolates from
+            one shared level (h = 0) to the full lo→hi ramp (h = 1); more
+            noise ⇒ rougher per-shard loss ⇒ larger effective L_m, the
+            mechanism ``repro.data.make_heterogeneous_inputs`` (now a
+            thin h = 1 wrapper over this module) always used
+
+Both are deterministic per (seed, worker): convex data comes from one
+``np.random.default_rng(seed)`` stream with per-worker rescaling, token
+shards from ``TokenStream``'s per-(seed, step, worker) SeedSequence.
+
+Measurables reported into ``RunReport.extras`` by the convex topology
+(``repro.engine.topology.SimWorkers``):
+
+  ``L_m_spread``   realized max L_m / min L_m — the dial's direct readout
+  ``hetero_score`` the paper-style score: the fraction of workers whose
+                   L_m falls below the trigger-derived skip threshold
+                   (:func:`hetero_score`); conservative by construction
+
+The cluster cost model that turns the resulting upload masks into
+simulated wall-clock lives in ``repro.netsim.cluster``; the two compose
+in ``benchmarks/netsim_sweep.py`` (the rounds-vs-heterogeneity trend,
+``BENCH_netsim.json``).  See docs/ARCHITECTURE.md for where netsim hooks
+into the engine.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core import convex
+
+# h = 1 spread of the smoothness targets: the paper's Fig.-3 ramp
+# L_m = (1.3^{m-1}+1)^2 spans (1.3^8+1)^2 / (1.3^0+1)^2 ≈ 21× over 9 workers.
+PAPER_L_MAX = float((1.3 ** 8 + 1.0) ** 2)
+PAPER_SPREAD = float((1.3 ** 8 + 1.0) ** 2 / (1.3 ** 0 + 1.0) ** 2)
+
+
+def hetero_L_targets(num_workers: int, h: float, *,
+                     L_max: float = PAPER_L_MAX,
+                     spread: float = PAPER_SPREAD) -> np.ndarray:
+    """Per-worker smoothness targets for dial position ``h`` ∈ [0, 1].
+
+    Geometric ramp ending at ``L_max`` with realized spread
+    ``spread ** h``: h = 0 ⇒ all workers at L_max (uniform, Fig.-4
+    regime); h = 1 ⇒ the full Fig.-3-sized spread.  Keeping the TOP of
+    the ramp fixed (rather than the mean) keeps the roughest worker —
+    which dominates the global L and hence the α = 1/L stepsize — on a
+    comparable scale across the dial, so sweeps compare trigger behavior,
+    not stepsize regimes.
+    """
+    if not 0.0 <= h <= 1.0:
+        raise ValueError(f"heterogeneity dial h must be in [0, 1], got {h}")
+    if num_workers < 1:
+        raise ValueError(f"num_workers must be >= 1, got {num_workers}")
+    ratio = float(spread) ** float(h)
+    if num_workers == 1:
+        return np.asarray([L_max], np.float64)
+    expo = np.arange(num_workers, dtype=np.float64)[::-1] / (num_workers - 1)
+    return L_max * ratio ** (-expo)
+
+
+def hetero_problem(kind: str = "linreg", *, h: float, num_workers: int = 9,
+                   n_per: int = 50, d: int = 50, lam: float = 0.0,
+                   seed: int = 0, L_max: float = PAPER_L_MAX,
+                   spread: float = PAPER_SPREAD,
+                   dtype=None) -> convex.Problem:
+    """A convex problem at heterogeneity-dial position ``h``.
+
+    Same generator as ``repro.core.convex.synthetic`` (per-worker feature
+    rescaling hits the smoothness targets exactly), with the targets from
+    :func:`hetero_L_targets` — so the realized ``Problem.L_m`` spread is
+    ``spread ** h`` by construction, monotone in the dial.
+    """
+    kw = {} if dtype is None else {"dtype": dtype}
+    L_targets = hetero_L_targets(num_workers, h, L_max=L_max, spread=spread)
+    return convex.synthetic(kind, num_workers=num_workers, n_per=n_per, d=d,
+                            L_targets=list(L_targets), lam=lam, seed=seed,
+                            name=f"hetero-{kind}-h{h:g}", **kw)
+
+
+def realized_spread(L_m) -> float:
+    """max L_m / min L_m — the dial's direct measurable."""
+    L = np.asarray(L_m, np.float64)
+    return float(L.max() / L.min())
+
+
+def hetero_score(L_m, *, alpha: float, xi: float, D: int,
+                 num_workers: Optional[int] = None) -> float:
+    """The paper's Sec.-3 heterogeneity score, evaluated for a run's
+    actual trigger constants.
+
+    Fraction of workers whose L_m satisfies the *sufficient* skip
+    condition of the (15a)/(15b) triggers: bounding the LHS by
+    L_m²·D·Σ_d‖Δθ‖² and comparing with the RHS ξ·Σ_d‖Δθ‖²/(α²M²) shows
+    worker m can never trigger once
+
+        L_m ≤ √(ξ / D) / (α · M)
+
+    so the score is |{m : L_m ≤ √(ξ/D)/(αM)}| / M — the mass of workers
+    the theory *guarantees* to stay lazy.  It is conservative (the paper's
+    measured savings exceed it, ours too — compare against the realized
+    ``uploads_per_worker``); its monotone growth along the dial is the
+    Sec.-3 trend the netsim sweep reproduces.
+    """
+    L = np.asarray(L_m, np.float64)
+    M = int(num_workers or L.shape[0])
+    thresh = np.sqrt(float(xi) / float(D)) / (float(alpha) * M)
+    return float(np.mean(L <= thresh))
+
+
+# ---------------------------------------------------------------------------
+# Deep shards: the predictability-noise dial
+# ---------------------------------------------------------------------------
+
+def shard_noise_levels(num_workers: int, h: float = 1.0,
+                       noise_lo: float = 0.01,
+                       noise_hi: float = 0.4) -> Sequence[float]:
+    """Per-worker token-noise levels at dial position ``h``.
+
+    h = 1 is EXACTLY the historical ``make_heterogeneous_inputs`` ramp
+    ``lo + (hi−lo)·m/(W−1)`` (bit-identical batches — the deep golden in
+    tests/golden/ depends on it); h = 0 collapses every worker onto the
+    ramp's midpoint (homogeneous shards, same total noise budget).
+    """
+    if not 0.0 <= h <= 1.0:
+        raise ValueError(f"heterogeneity dial h must be in [0, 1], got {h}")
+    W = num_workers
+    center = 0.5 * (noise_lo + noise_hi)
+    levels = []
+    for m in range(W):
+        ramp = noise_lo + (noise_hi - noise_lo) * m / max(W - 1, 1)
+        levels.append((1.0 - h) * center + h * ramp)
+    return levels
+
+
+def hetero_inputs(cfg, stream, step: int, num_workers: int, batch: int,
+                  seq: int, *, h: float = 1.0, fixed: bool = True,
+                  noise_lo: float = 0.01, noise_hi: float = 0.4) -> dict:
+    """Global LM batch whose worker shards (rows ``m·B/W:(m+1)·B/W``,
+    matching ``repro.engine.topology.split_batch``) sit at heterogeneity-
+    dial position ``h``.
+
+    Worker m's stream noise comes from :func:`shard_noise_levels`; more
+    noise ⇒ flatter next-token structure ⇒ rougher per-shard loss surface
+    ⇒ larger effective L_m (paper Lemma 4's skip pattern).  ``fixed=True``
+    reuses step 0's data every round (the full-batch regime of the paper
+    and the golden harness).  Deterministic per (stream.seed, step,
+    worker).
+    """
+    import jax.numpy as jnp
+
+    W = num_workers
+    per = batch // W
+    eff_step = 0 if fixed else step
+    levels = shard_noise_levels(W, h, noise_lo, noise_hi)
+    shards = [stream.batch(eff_step, m, per, seq + 1, noise=levels[m])
+              for m in range(W)]
+    toks = np.concatenate(shards, axis=0)
+    tokens, targets = toks[:, :-1], toks[:, 1:]
+    return {"tokens": jnp.asarray(tokens), "targets": jnp.asarray(targets)}

@@ -1,0 +1,365 @@
+"""repro.netsim: the heterogeneity dial, the cluster cost model, and the
+bounded-staleness async topology (including the staleness-0 golden
+pinning against tests/golden/lag_wk_50step.json)."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import netsim
+from repro.core import convex
+from repro.engine import Experiment
+from repro.engine.topology import AsyncShards, make_topology
+from repro.netsim import cluster as ncluster
+from repro.netsim import hetero as nhetero
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneity dial: targets, realized spread, determinism
+# ---------------------------------------------------------------------------
+
+def test_L_targets_dial_endpoints_and_monotone_spread():
+    flat = nhetero.hetero_L_targets(9, 0.0)
+    assert np.allclose(flat, flat[0])                     # h=0 ⇒ uniform
+    full = nhetero.hetero_L_targets(9, 1.0)
+    assert np.isclose(full[-1] / full[0], nhetero.PAPER_SPREAD)
+    # the top of the ramp is pinned across the whole dial
+    for h in (0.0, 0.3, 0.7, 1.0):
+        t = nhetero.hetero_L_targets(9, h)
+        assert np.isclose(t[-1], nhetero.PAPER_L_MAX)
+    spreads = [t[-1] / t[0]
+               for t in (nhetero.hetero_L_targets(9, h)
+                         for h in (0.0, 0.25, 0.5, 0.75, 1.0))]
+    assert all(a < b for a, b in zip(spreads, spreads[1:]))
+
+
+def test_hetero_problem_realized_spread_monotone_in_dial():
+    """The ISSUE's dial criterion: the REALIZED L_m spread (recomputed
+    from the generated data, not the targets) grows monotonically."""
+    spreads = []
+    for h in (0.0, 0.5, 1.0):
+        prob = nhetero.hetero_problem("linreg", h=h, num_workers=5,
+                                      n_per=12, d=6, seed=3)
+        realized = [convex.smoothness("linreg", np.asarray(prob.X[m]))
+                    for m in range(5)]
+        assert np.allclose(realized, np.asarray(prob.L_m), rtol=1e-4)
+        spreads.append(nhetero.realized_spread(prob.L_m))
+    assert spreads[0] == pytest.approx(1.0, rel=1e-4)
+    assert spreads[0] < spreads[1] < spreads[2]
+
+
+def test_hetero_problem_deterministic_per_seed():
+    a = nhetero.hetero_problem("logreg", h=0.6, num_workers=4, n_per=8,
+                               d=5, seed=7)
+    b = nhetero.hetero_problem("logreg", h=0.6, num_workers=4, n_per=8,
+                               d=5, seed=7)
+    np.testing.assert_array_equal(np.asarray(a.X), np.asarray(b.X))
+    np.testing.assert_array_equal(np.asarray(a.y), np.asarray(b.y))
+    c = nhetero.hetero_problem("logreg", h=0.6, num_workers=4, n_per=8,
+                               d=5, seed=8)
+    assert not np.array_equal(np.asarray(a.X), np.asarray(c.X))
+
+
+def test_dial_validation():
+    with pytest.raises(ValueError, match=r"\[0, 1\]"):
+        nhetero.hetero_L_targets(9, 1.5)
+    with pytest.raises(ValueError, match=r"\[0, 1\]"):
+        nhetero.shard_noise_levels(4, -0.1)
+
+
+def test_hetero_score_threshold_semantics():
+    L_m = np.asarray([0.5, 1.0, 4.0, 40.0])
+    # threshold = sqrt(xi/D)/(alpha*M) = sqrt(0.4/10)/(0.05*4) = 1.0
+    s = nhetero.hetero_score(L_m, alpha=0.05, xi=0.4, D=10)
+    assert s == pytest.approx(0.5)   # the two workers at/below 1.0
+
+
+# ---------------------------------------------------------------------------
+# Deep shards: noise dial + per-(seed, worker) determinism
+# ---------------------------------------------------------------------------
+
+def test_shard_noise_levels_endpoints():
+    lv1 = nhetero.shard_noise_levels(4, 1.0)
+    legacy = [0.01 + (0.4 - 0.01) * m / 3 for m in range(4)]
+    assert lv1 == legacy                       # h=1 EXACTLY the old ramp
+    lv0 = nhetero.shard_noise_levels(4, 0.0)
+    assert lv0 == [0.5 * (0.01 + 0.4)] * 4     # h=0 collapses to midpoint
+
+
+def test_hetero_inputs_h1_bit_identical_to_legacy_wrapper(tiny_cfg_stream):
+    """The golden harness depends on make_heterogeneous_inputs staying
+    bit-identical — and it is now a wrapper over the netsim dial."""
+    cfg, stream = tiny_cfg_stream
+    from repro.data import make_heterogeneous_inputs
+    legacy = make_heterogeneous_inputs(cfg, stream, 0, 4, 8, 32)
+    dialed = nhetero.hetero_inputs(cfg, stream, 0, 4, 8, 32, h=1.0)
+    np.testing.assert_array_equal(np.asarray(legacy["tokens"]),
+                                  np.asarray(dialed["tokens"]))
+    np.testing.assert_array_equal(np.asarray(legacy["targets"]),
+                                  np.asarray(dialed["targets"]))
+
+
+def test_hetero_inputs_deterministic_per_seed_step_worker(tiny_cfg_stream):
+    cfg, stream = tiny_cfg_stream
+    a = nhetero.hetero_inputs(cfg, stream, 3, 4, 8, 32, h=0.5, fixed=False)
+    b = nhetero.hetero_inputs(cfg, stream, 3, 4, 8, 32, h=0.5, fixed=False)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+    # worker shards are distinct (per-worker drift + noise level)
+    toks = np.asarray(a["tokens"]).reshape(4, 2, -1)
+    assert not np.array_equal(toks[0], toks[1])
+    # fixed=True ignores the step index, fixed=False does not
+    f0 = nhetero.hetero_inputs(cfg, stream, 0, 4, 8, 32, h=0.5, fixed=True)
+    f3 = nhetero.hetero_inputs(cfg, stream, 3, 4, 8, 32, h=0.5, fixed=True)
+    np.testing.assert_array_equal(np.asarray(f0["tokens"]),
+                                  np.asarray(f3["tokens"]))
+    s3 = nhetero.hetero_inputs(cfg, stream, 4, 4, 8, 32, h=0.5, fixed=False)
+    assert not np.array_equal(np.asarray(a["tokens"]),
+                              np.asarray(s3["tokens"]))
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg_stream():
+    from repro.configs import get_config
+    from repro.data import TokenStream
+    cfg = get_config("llama3.2-1b", num_layers=1, d_model=16, num_heads=2,
+                     num_kv_heads=1, head_dim=8, d_ff=32, vocab_size=64)
+    return cfg, TokenStream(vocab=cfg.vocab_size, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# Cluster spec parsing + the event-driven pricer
+# ---------------------------------------------------------------------------
+
+def test_make_cluster_parses_the_issue_spec():
+    c = ncluster.make_cluster("hetero:9@10ms/1Gbps")
+    assert c.num_workers == 9 and c.name == "hetero"
+    assert c.up_latency_s[0] == pytest.approx(10e-3)
+    assert c.up_latency_s[-1] == pytest.approx(10e-3 * ncluster.LAT_SPREAD)
+    assert c.up_bw_Bps[0] == pytest.approx(1e9 / 8)
+    assert c.up_bw_Bps[-1] == pytest.approx(1e9 / 8 / ncluster.BW_SPREAD)
+    assert c.straggler_sigma == 0.0
+    # straggler profile draws deterministic lognormal jitter
+    s = ncluster.make_cluster("straggler:4@1ms/10Gbps")
+    assert s.straggler_sigma > 0
+    np.testing.assert_array_equal(s.compute_jitter(6), s.compute_jitter(6))
+    # pass-through + unit variants; b = bits, B = bytes at ANY prefix case
+    assert ncluster.make_cluster(c) is c
+    assert ncluster.make_cluster("uniform:2@50us/125MBps").up_bw_Bps[0] \
+        == pytest.approx(125e6)
+    assert ncluster.make_cluster("uniform:2@1ms/125KBps").up_bw_Bps[0] \
+        == pytest.approx(125e3)
+    assert ncluster.make_cluster("uniform:2@1ms/1000kbps").up_bw_Bps[0] \
+        == pytest.approx(125e3)
+    assert ncluster.make_cluster("uniform:2@1ms/8bps").up_bw_Bps[0] \
+        == pytest.approx(1.0)
+
+
+def test_policy_transfer_seconds_uses_declared_wire_bytes():
+    """The single-upload costing convenience: LAQ's quantized bytes make
+    its upload cheaper than the dense one on the same link."""
+    from repro import comm
+    link = ncluster.Link(latency_s=1e-3, bandwidth_Bps=1e3)
+    grads = {"w": jnp.zeros((100,), jnp.float32)}
+    dense = comm.make_policy("lag-wk")
+    laq = comm.make_policy("laq@4")
+    t_dense = dense.transfer_seconds(grads, link)
+    assert t_dense == pytest.approx(1e-3 + 400 / 1e3)
+    assert laq.transfer_seconds(grads, link) < t_dense
+
+
+def test_make_cluster_error_paths():
+    with pytest.raises(ValueError, match="unknown cluster profile"):
+        ncluster.make_cluster("mesh:9@1ms/1Gbps")
+    with pytest.raises(ValueError, match="not a latency"):
+        ncluster.make_cluster("uniform:9@fast/1Gbps")
+    with pytest.raises(ValueError, match="not a bandwidth"):
+        ncluster.make_cluster("uniform:9@1ms/big")
+    with pytest.raises(ValueError, match="omits the worker count"):
+        ncluster.make_cluster("uniform@1ms/1Gbps")
+    with pytest.raises(ValueError, match="names 4 workers"):
+        ncluster.make_cluster("uniform:4@1ms/1Gbps", num_workers=9)
+    with pytest.raises(ValueError, match="must be >= 1"):
+        ncluster.make_cluster("uniform:0@1ms/1Gbps")
+    with pytest.raises(ValueError, match="latency.*bandwidth|/"):
+        ncluster.make_cluster("uniform:4@1ms")
+
+
+def test_price_mask_hand_computed_round():
+    cl = ncluster.make_cluster("uniform:3@2ms/1MBps")
+    # all-upload round: compute 1ms + latency 2ms + 3 serialized 400B
+    # transfers + broadcast (2ms + 400B)
+    t_all = ncluster.price_mask(np.ones((1, 3), bool), 400.0, cl,
+                                dense_bytes=400.0)[0]
+    want = 1e-3 + 2e-3 + 3 * 400 / 1e6 + (2e-3 + 400 / 1e6)
+    assert t_all == pytest.approx(want)
+    # quiet round: barrier + broadcast only
+    t_quiet = ncluster.price_mask(np.zeros((1, 3), bool), 400.0, cl,
+                                  dense_bytes=400.0)[0]
+    assert t_quiet == pytest.approx(1e-3 + 2e-3 + 2e-3 + 400 / 1e6)
+    # every skipped upload saves exactly its serialized transfer
+    t_one = ncluster.price_mask(np.asarray([[True, False, False]]), 400.0,
+                                cl, dense_bytes=400.0)[0]
+    assert t_one == pytest.approx(t_quiet + 400 / 1e6)
+    assert t_quiet < t_one < t_all
+
+
+def test_price_mask_shape_and_mismatch_errors():
+    cl = ncluster.make_cluster("uniform:3@1ms/1Gbps")
+    with pytest.raises(ValueError, match="rounds, workers"):
+        ncluster.price_mask(np.ones((5,), bool), 4.0, cl)
+    with pytest.raises(ValueError, match="has 4 workers but cluster"):
+        ncluster.price_mask(np.ones((5, 4), bool), 4.0, cl)
+
+
+def test_experiment_cluster_pricing_end_to_end(netsim_problem):
+    r = Experiment(problem=netsim_problem, algo="lag-wk", steps=40,
+                   opt_loss=0.0, cluster="hetero:3@1ms/1Mbps").run()
+    assert r.round_seconds.shape == (40,)
+    assert r.extras["cluster"] == "hetero"
+    assert r.wall_seconds == pytest.approx(r.round_seconds.sum())
+    assert r.seconds_to(np.inf) == pytest.approx(r.round_seconds[0])
+    assert r.summary(eps=np.inf)["seconds_to_eps"] is not None
+    # heterogeneity measurables ride along on every convex report
+    assert r.extras["L_m_spread"] >= 1.0
+    assert 0.0 <= r.extras["hetero_score"] <= 1.0
+    # lazily-uploading runs are never pricier than all-upload GD
+    gd = Experiment(problem=netsim_problem, algo="gd", steps=40,
+                    opt_loss=0.0, cluster="hetero:3@1ms/1Mbps").run()
+    assert r.wall_seconds <= gd.wall_seconds
+
+
+def test_unpriced_report_raises_actionably(netsim_problem):
+    r = Experiment(problem=netsim_problem, algo="gd", steps=3,
+                   opt_loss=0.0).run()
+    with pytest.raises(ValueError, match="price_report"):
+        _ = r.wall_seconds
+    with pytest.raises(ValueError, match="cluster="):
+        r.seconds_to(1e-3)
+
+
+def test_experiment_validation_of_netsim_knobs(netsim_problem):
+    with pytest.raises(ValueError, match="hetero_problem"):
+        Experiment(problem=netsim_problem, algo="gd", steps=2,
+                   hetero=0.5).run()
+    with pytest.raises(ValueError, match="names 9 workers"):
+        Experiment(problem=netsim_problem, algo="gd", steps=2,
+                   opt_loss=0.0, cluster="uniform:9@1ms/1Gbps").run()
+
+
+@pytest.fixture(scope="module")
+def netsim_problem():
+    return nhetero.hetero_problem("linreg", h=0.8, num_workers=3, n_per=8,
+                                  d=4, seed=1)
+
+
+# ---------------------------------------------------------------------------
+# Async topology: spec parsing, staleness semantics, the golden pinning
+# ---------------------------------------------------------------------------
+
+def test_async_spec_parsing():
+    t = make_topology("async:4@2")
+    assert isinstance(t, AsyncShards)
+    assert t.num_units == 4 and t.staleness == 2
+    assert make_topology("async").staleness == 1          # default bound
+    assert make_topology("async:4@0").staleness == 0
+    np.testing.assert_array_equal(
+        AsyncShards(staleness=2).stale_steps(4), [0, 0, 1, 2])
+    np.testing.assert_array_equal(
+        AsyncShards(staleness=3).stale_steps(2), [0, 3])
+    with pytest.raises(ValueError, match="only 'async'"):
+        make_topology("pods:2@1")
+    with pytest.raises(ValueError, match="not an integer staleness"):
+        make_topology("async:4@x")
+    with pytest.raises(ValueError, match="staleness must be >= 0"):
+        make_topology("async:4@-1")
+    with pytest.raises(ValueError):
+        AsyncShards(staleness=-2)
+
+
+def test_async_staleness0_bitwise_equals_sync(tiny_cfg_stream):
+    """The strong form of the pinning on a tiny model: the staleness-0
+    ring path is BITWISE identical to the sync path, loss and state."""
+    cfg, _ = tiny_cfg_stream
+    sync = Experiment(model=cfg, algo="lag-wk", steps=8, workers=4,
+                      batch=8, seq=16).run()
+    a0 = Experiment(model=cfg, algo="lag-wk", steps=8, workers=4,
+                    batch=8, seq=16, topology="async:4@0").run()
+    np.testing.assert_array_equal(sync.losses, a0.losses)
+    np.testing.assert_array_equal(sync.comm_mask, a0.comm_mask)
+
+
+def test_async_staleness0_reproduces_sync_golden():
+    """Acceptance criterion: async@0 through the Experiment front door
+    against tests/golden/lag_wk_50step.json — the sync golden's exact
+    comm trajectory and losses (same tolerances as the sync pinning in
+    tests/test_engine.py)."""
+    gold = json.load(open(os.path.join(GOLDEN_DIR, "lag_wk_50step.json")))
+    r = Experiment(model="llama3.2-1b", algo="lag-wk", steps=50,
+                   workers=4, lr=0.05, batch=8, seq=64,
+                   topology="async:4@0").run()
+    np.testing.assert_allclose(r.losses, gold["losses"], rtol=1e-4)
+    assert r.comms_per_iter.tolist() == gold["comm_this_round"]
+    assert r.uploads_per_worker.tolist() == gold["comm_per_worker"]
+    assert r.total_comms == gold["comm_total"]
+    assert r.topology == "async"
+
+
+def test_async_staleness_changes_trigger_behavior(tiny_cfg_stream):
+    """τ > 0 must actually bite: the stale worker sees old params, its
+    innovation shrinks, and the trajectory departs from sync while
+    staying finite."""
+    cfg, _ = tiny_cfg_stream
+    sync = Experiment(model=cfg, algo="lag-wk", steps=10, workers=4,
+                      batch=8, seq=16).run()
+    a2 = Experiment(model=cfg, algo="lag-wk", steps=10, workers=4,
+                    batch=8, seq=16, topology="async:4@2").run()
+    assert np.isfinite(a2.losses).all()
+    assert not np.array_equal(sync.comm_mask, a2.comm_mask)
+    # round 0 still fires everyone (all views are θ0 — the paper's init)
+    assert a2.comm_mask[0].all()
+
+
+def test_async_ring_holds_lagged_params(tiny_cfg_stream):
+    """theta_ring[d] is exactly the params from d server steps ago."""
+    cfg, _ = tiny_cfg_stream
+    from repro.data import make_heterogeneous_inputs
+    from repro.dist import lag_trainer
+    from repro.data import TokenStream
+    topo = make_topology("async:2@2")
+    tcfg = lag_trainer.TrainerConfig(algo="lag-wk", num_workers=2)
+    stream = TokenStream(vocab=cfg.vocab_size, seed=0)
+    batch = make_heterogeneous_inputs(cfg, stream, 0, 2, 4, 16)
+    state = lag_trainer.init_state(jax.random.PRNGKey(0), cfg, tcfg,
+                                   topology=topo)
+    step = jax.jit(lag_trainer.make_train_step(cfg, tcfg, topology=topo))
+    prev_params = []
+    for _ in range(4):
+        prev_params.append(state["params"])
+        state, _ = step(state, batch)
+    ring = state["lag"]["theta_ring"]
+    for d, want in ((0, state["params"]), (1, prev_params[-1]),
+                    (2, prev_params[-2])):
+        same = jax.tree_util.tree_map(
+            lambda r, p: bool(jnp.all(r[d] == p)), ring, want)
+        assert all(jax.tree_util.tree_leaves(same)), f"ring[{d}] mismatch"
+
+
+def test_async_needs_params_for_extra_state():
+    with pytest.raises(ValueError, match="needs params"):
+        AsyncShards(staleness=1).extra_state()
+
+
+def test_netsim_package_surface():
+    """The documented public surface exists (README/ARCHITECTURE promise
+    these names)."""
+    for name in ("hetero_problem", "hetero_inputs", "shard_noise_levels",
+                 "realized_spread", "hetero_score", "make_cluster",
+                 "price_mask", "price_report", "Cluster", "Link",
+                 "CLUSTERS"):
+        assert hasattr(netsim, name), name

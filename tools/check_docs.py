@@ -1,0 +1,121 @@
+"""Docs-integrity gate (CI step): keep the docs as tested as the code.
+
+Three checks, any failure exits nonzero with the offending location:
+
+  1. EXECUTE every ```python block in README.md, each in a fresh
+     namespace — README examples must actually run (the engine/netsim
+     quickstarts are real code, not pseudocode).
+  2. EXPERIMENTS.md splice markers ↔ benchmarks/update_experiments.py's
+     MARKERS must match exactly in both directions, so a dangling
+     ``<!-- X_TABLE -->`` (marker without a splicer, or splicer without
+     a marker) fails at PR time instead of silently never regenerating.
+  3. Relative markdown links in README.md, EXPERIMENTS.md, ROADMAP.md
+     and docs/*.md must resolve to existing files.
+
+Run locally:  PYTHONPATH=src python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+import time
+import traceback
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+FENCE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.M | re.S)
+MARKER = re.compile(r"<!--\s*(\w+_TABLE)\s*-->")
+# [text](target) — skip images, absolute URLs and pure anchors
+LINK = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
+
+LINKED_DOCS = ["README.md", "EXPERIMENTS.md", "ROADMAP.md"]
+
+
+def fail(msgs):
+    for m in msgs:
+        print(f"FAIL: {m}")
+    print(f"\ndocs-integrity: {len(msgs)} failure(s)")
+    return 1
+
+
+def check_readme_blocks() -> list:
+    errs = []
+    md = open(os.path.join(ROOT, "README.md")).read()
+    blocks = FENCE.findall(md)
+    if not blocks:
+        return ["README.md has no ```python blocks — the quickstarts "
+                "were removed?"]
+    for i, src in enumerate(blocks):
+        t0 = time.time()
+        try:
+            exec(compile(src, f"README.md[python block {i}]", "exec"),
+                 {"__name__": f"readme_block_{i}"})
+            print(f"  ok: README python block {i} "
+                  f"({len(src.splitlines())} lines, "
+                  f"{time.time() - t0:.1f}s)")
+        except Exception:
+            errs.append(f"README.md python block {i} raised:\n"
+                        f"{traceback.format_exc()}")
+    return errs
+
+
+def check_markers() -> list:
+    sys.path.insert(0, os.path.join(ROOT, "benchmarks"))
+    import update_experiments
+    known = set(update_experiments.MARKERS)
+    found = set(MARKER.findall(
+        open(os.path.join(ROOT, "EXPERIMENTS.md")).read()))
+    errs = []
+    for m in sorted(found - known):
+        errs.append(f"EXPERIMENTS.md marker <!-- {m} --> has no splicer in "
+                    f"benchmarks/update_experiments.py MARKERS")
+    for m in sorted(known - found):
+        errs.append(f"benchmarks/update_experiments.py MARKERS entry {m!r} "
+                    f"has no <!-- {m} --> marker in EXPERIMENTS.md")
+    if not errs:
+        print(f"  ok: EXPERIMENTS.md markers == splicer MARKERS "
+              f"({sorted(known)})")
+    return errs
+
+
+def check_links() -> list:
+    errs = []
+    docs = [os.path.join(ROOT, p) for p in LINKED_DOCS]
+    docs += sorted(glob.glob(os.path.join(ROOT, "docs", "*.md")))
+    n = 0
+    for doc in docs:
+        base = os.path.dirname(doc)
+        for target in LINK.findall(open(doc).read()):
+            if target.startswith(("http://", "https://", "#", "mailto:")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            n += 1
+            if not os.path.exists(os.path.join(base, path)):
+                errs.append(f"{os.path.relpath(doc, ROOT)}: broken link "
+                            f"-> {target}")
+    if not errs:
+        print(f"  ok: {n} relative doc links resolve")
+    return errs
+
+
+def main() -> int:
+    os.chdir(ROOT)
+    errs = []
+    print("docs-integrity: EXPERIMENTS.md splice markers")
+    errs += check_markers()
+    print("docs-integrity: doc cross-links")
+    errs += check_links()
+    print("docs-integrity: executing README python blocks")
+    errs += check_readme_blocks()
+    if errs:
+        return fail(errs)
+    print("docs-integrity: all checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
