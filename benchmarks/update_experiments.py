@@ -1,7 +1,9 @@
 """Regenerate the machine-spliced tables in EXPERIMENTS.md (between the
 <!-- ..._TABLE --> markers, one per entry in MARKERS): §Dry-run and
 §Roofline from experiments/dryrun/*.json, §Heterogeneity & wall-clock
-from BENCH_netsim.json (``python -m benchmarks.netsim_sweep``).
+from BENCH_netsim.json (``python -m benchmarks.netsim_sweep``), §Perf's
+comm-plane table from BENCH_perf_comm.json
+(``python -m benchmarks.perf_comm``).
 
 tools/check_docs.py cross-checks MARKERS against the markers actually
 present in EXPERIMENTS.md, so adding a table here without its marker
@@ -18,7 +20,8 @@ sys.path.insert(0, os.path.dirname(__file__))
 from roofline import load_records, roofline_row  # noqa: E402
 
 #: every marker this script owns — the docs-integrity check's source of truth
-MARKERS = ("DRYRUN_TABLE", "ROOFLINE_TABLE", "NETSIM_TABLE")
+MARKERS = ("DRYRUN_TABLE", "ROOFLINE_TABLE", "NETSIM_TABLE",
+           "PERF_COMM_TABLE")
 
 
 def dryrun_table(dryrun_dir: str) -> str:
@@ -107,6 +110,33 @@ def netsim_table(bench_path: str) -> str:
     return "\n".join(out)
 
 
+def perf_comm_table(bench_path: str) -> str:
+    """BENCH_perf_comm.json → the §Perf comm-plane throughput table."""
+    with open(bench_path) as fh:
+        rec = json.load(fh)
+    mode = ("interpret mode" if rec.get("pallas_interpret_mode")
+            else "compiled Mosaic")
+    out = [f"Backend `{rec['backend']}` ({mode}), LAQ bits = {rec['bits']} "
+           f"(`python -m benchmarks.perf_comm`):",
+           "",
+           "| shape | leaves | params | M | oracle rnd/s | per-leaf rnd/s "
+           "| batched rnd/s | batched MB/s | vs per-leaf |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for m in rec["measurements"]:
+        r = m["routes"]
+        out.append(
+            f"| {m['shape']} | {m['leaves']} | {m['params']:,} | {m['M']} "
+            f"| {r['oracle']['rounds_per_sec']:g} "
+            f"| {r['per_leaf']['rounds_per_sec']:g} "
+            f"| {r['batched']['rounds_per_sec']:g} "
+            f"| {r['batched']['encode_mb_per_sec']:g} "
+            f"| **{m['speedup_batched_vs_per_leaf']:g}×** |")
+    n_ok = sum(1 for c in rec["claims"] if c["ok"])
+    out.append(f"\n**{n_ok}/{len(rec['claims'])} perf_comm claims "
+               f"validated** ({rec['methodology']}).")
+    return "\n".join(out)
+
+
 def splice(md: str, marker: str, content: str) -> str:
     pat = re.compile(rf"<!-- {marker} -->.*?(?=\n## |\Z)", re.S)
     repl = f"<!-- {marker} -->\n\n{content}\n"
@@ -128,6 +158,9 @@ def main():
         md = splice(md, "ROOFLINE_TABLE", roofline_table_md(dryrun_dir))
     if os.path.exists("BENCH_netsim.json"):
         md = splice(md, "NETSIM_TABLE", netsim_table("BENCH_netsim.json"))
+    if os.path.exists("BENCH_perf_comm.json"):
+        md = splice(md, "PERF_COMM_TABLE",
+                    perf_comm_table("BENCH_perf_comm.json"))
     open(path, "w").write(md)
     print("EXPERIMENTS.md tables updated")
 

@@ -61,7 +61,8 @@ def _parse_spec(spec: str):
 
 
 def make_policy(spec: str, *, bits: int = 4, use_pallas: bool = False,
-                sqnorm_fn=None, probs=None) -> CommPolicy:
+                sqnorm_fn=None, probs=None,
+                fastpath="auto") -> CommPolicy:
     """Build a ``CommPolicy`` from a spec string.
 
     Grammar: ``[cyc-|num-]<algo>[@<bits>]``.
@@ -76,9 +77,16 @@ def make_policy(spec: str, *, bits: int = 4, use_pallas: bool = False,
         ``"cyc-laq@8"``).  ``probs`` feeds the sampled schedule
         (num-IAG's p ∝ L_m); uniform when omitted.
 
-    ``use_pallas`` only reaches LAQ; ``sqnorm_fn`` (e.g. the Pallas fused
-    ``repro.kernels.lag_trigger.ops.fused_tree_sqnorm``) reaches every
-    trigger's LHS.
+    ``fastpath`` resolves the batched flat-buffer comm plane
+    (``repro.fastpath``) once for the policy: ``"auto"`` (default) is ON
+    when running on TPU and falls back to the jnp oracle on CPU; ``"on"``
+    forces the plane (interpret mode off-TPU — the parity tier);
+    ``"off"``/None disables it.  ``use_pallas=True`` SELECTS the legacy
+    per-leaf route (the fused ``repro.kernels.lag_trigger`` kernels for
+    LAQ's encode, plus whatever ``sqnorm_fn`` injects into the triggers'
+    LHS), so it disables an ``"auto"`` plane on every backend — the two
+    routes would otherwise silently shadow each other on TPU only — and
+    combining it with ``fastpath="on"`` raises.
     """
     name, param = _parse_spec(spec)
 
@@ -116,7 +124,18 @@ def make_policy(spec: str, *, bits: int = 4, use_pallas: bool = False,
                 f"bad policy spec {spec!r}: '@{param}' is not an integer "
                 f"bit width (want e.g. 'laq@8')") from None
 
-    kw = {}
+    if use_pallas:
+        # the per-leaf route is an explicit selection: a live plane would
+        # shadow it (ctx.fast wins inside encode/should_upload) on TPU
+        # while CPU kept using it — refuse the ambiguity
+        if fastpath == "on":
+            raise ValueError(
+                "conflicting comm-plane configs: use_pallas=True selects "
+                "the legacy per-leaf Pallas route but fastpath='on' forces "
+                "the batched plane (repro.fastpath), which would shadow "
+                "it — pass one of them")
+        fastpath = "off"
+    kw = {"fastpath": fastpath}
     if sqnorm_fn is not None:
         kw["sqnorm_fn"] = sqnorm_fn
     if cls is LAQPolicy:

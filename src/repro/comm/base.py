@@ -65,6 +65,10 @@ class CommRound:
     worker_id: Optional[jnp.ndarray] = None  # () int slot in the worker dim
     key: Optional[jnp.ndarray] = None    # per-round PRNG key, broadcast to
     #                                      every worker (stochastic schedules)
+    fast: Optional[Dict[str, Any]] = None    # this worker's slice of the
+    #   batched fast-path precompute (repro.fastpath): kernel-served trigger
+    #   sqnorms / LAQ payloads the policy consumes instead of recomputing
+    #   per leaf.  None on the oracle path.
 
 
 # ---------------------------------------------------------------------------
@@ -87,6 +91,19 @@ class CommPolicy:
                              sample (second vmapped backward pass)
       ``needs_rng``          driver splits a fresh per-round PRNG key into
                              ``ctx.key`` (stochastic schedules)
+
+    The batched fast path (``repro.fastpath``) is resolved ONCE per policy
+    into ``self.fastpath`` — a ``FastPathPlan`` or None.  When the plan is
+    active, ``repro.engine.rounds.policy_rounds`` calls
+    :meth:`fast_precompute` BEFORE vmapping (one flat-buffer Pallas launch
+    for all workers), routes each worker's slice in via ``ctx.fast``, and
+    folds state through :meth:`fast_decode` AFTER the vmapped trigger
+    (batched masked lazy updates) — so the per-leaf per-worker kernel
+    launches of ``repro.kernels.lag_trigger.ops`` never happen on the hot
+    path.  Every shipped policy implements :meth:`fast_precompute`
+    explicitly; the base method raises, which is the registry tripwire
+    against new policies silently bypassing the plane
+    (tests/test_engine.py runs the smoke matrix with the plan forced on).
     """
     name: str = "base"
     state_keys: Tuple[str, ...] = ("grad_hat",)
@@ -95,10 +112,15 @@ class CommPolicy:
     needs_grad_at_hat: bool = False
     needs_rng: bool = False
 
-    def __init__(self, sqnorm_fn: Callable[[Pytree], jnp.ndarray] = lag.tree_sqnorm):
+    def __init__(self, sqnorm_fn: Callable[[Pytree], jnp.ndarray] = lag.tree_sqnorm,
+                 fastpath="auto"):
         # injectable so drivers can supply a model-axis-psum'd or
         # Pallas-fused squared norm (repro.kernels.lag_trigger)
         self.sqnorm_fn = sqnorm_fn
+        # the batched comm plane, resolved once per policy ("auto" → on
+        # when on_tpu(); "on" forces interpret-mode parity off-TPU)
+        from repro import fastpath as fastpath_lib
+        self.fastpath = fastpath_lib.make_plan(fastpath)
 
     # -- state --------------------------------------------------------------
     def init_state(self, grad0: Pytree,
@@ -149,6 +171,52 @@ class CommPolicy:
         if "theta_hat" in st:
             new_st["theta_hat"] = lag.tree_select(comm, ctx.theta,
                                                   st["theta_hat"])
+        return delta, new_st
+
+    # -- the batched fast path ----------------------------------------------
+    def fast_precompute(self, plan, grads: Pytree, st: PolicyState, *,
+                        theta: Pytree, theta_stacked: bool,
+                        grad_at_hat: Optional[Pytree] = None
+                        ) -> Optional[Dict[str, Any]]:
+        """Batched per-round precompute: a dict of stacked (W, …) arrays
+        the driver vmaps into each worker's ``ctx.fast``, or None when
+        this policy has nothing kernel-served (the driver then runs the
+        plain vmapped round).
+
+        This base method raising IS the fast-path tripwire: a new policy
+        must either route its trigger/encode reductions through ``plan``
+        or explicitly ``return None`` to declare the oracle path — it
+        cannot silently inherit a bypass.
+        """
+        raise NotImplementedError(
+            f"{type(self).__name__} does not declare a fast-path route: "
+            f"implement fast_precompute() to serve its trigger/encode "
+            f"reductions from the batched plane (repro.fastpath), or "
+            f"'return None' to explicitly opt out (see CommPolicy."
+            f"fast_precompute)")
+
+    def fast_decode(self, plan, st: PolicyState, payload: Pytree,
+                    aux: Dict[str, Any], comm: jnp.ndarray, *,
+                    theta: Pytree, theta_stacked: bool
+                    ) -> Tuple[Pytree, PolicyState]:
+        """Batched :meth:`decode` over stacked (W, …) trees — the masked
+        lazy updates served by ONE plane launch instead of per-worker
+        elementwise folds.  Same contract as ``decode``: the returned
+        stacked delta is exactly what ``grad_hat`` absorbs.
+        """
+        W = comm.shape[0]
+        delta = jax.tree_util.tree_map(
+            lambda p: comm.reshape((W,) + (1,) * (p.ndim - 1)
+                                   ).astype(p.dtype) * p, payload)
+        new_st = dict(st)
+        # ĝ ← ĝ + mask·payload: bitwise the per-worker decode for f32
+        # state (same precomputed payload, same f32 ops); bf16 mirrors
+        # round once from f32 instead of twice (≤1 ulp, see the parity
+        # tier's documented tolerance)
+        new_st["grad_hat"] = plan.masked_add(payload, st["grad_hat"], comm)
+        if "theta_hat" in st:
+            new_st["theta_hat"] = plan.masked_select(
+                theta, st["theta_hat"], comm, a_stacked=theta_stacked)
         return delta, new_st
 
     def wire_bytes(self, grad_like: Pytree) -> float:

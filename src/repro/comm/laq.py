@@ -58,8 +58,9 @@ class LAQPolicy(CommPolicy):
     state_keys = ("grad_hat", "resid")
 
     def __init__(self, bits: int = 4, use_pallas: bool = False,
-                 sqnorm_fn: Callable[[Pytree], jnp.ndarray] = lag.tree_sqnorm):
-        super().__init__(sqnorm_fn=sqnorm_fn)
+                 sqnorm_fn: Callable[[Pytree], jnp.ndarray] = lag.tree_sqnorm,
+                 fastpath="auto"):
+        super().__init__(sqnorm_fn=sqnorm_fn, fastpath=fastpath)
         if not 2 <= bits <= 16:
             raise ValueError(f"LAQ bits must be in [2, 16], got {bits}")
         self.bits = bits
@@ -75,6 +76,11 @@ class LAQPolicy(CommPolicy):
 
     def encode(self, ctx: CommRound, st: PolicyState
                ) -> Tuple[Pytree, Dict[str, Any]]:
+        if ctx.fast is not None and "payload" in ctx.fast:
+            # batched flat-buffer encode already ran for all workers
+            # (repro.fastpath): this worker's slice arrives via ctx.fast
+            return ctx.fast["payload"], {"resid_new": ctx.fast["resid_new"],
+                                         "lhs_sq": ctx.fast["lhs_sq"]}
         payload, resid_new, lhs = lag_ops.laq_encode(
             ctx.grad_new, st["grad_hat"], st["resid"], bits=self.bits,
             use_ref=not self.use_pallas)
@@ -93,6 +99,29 @@ class LAQPolicy(CommPolicy):
         delta, new_st = super().decode(ctx, st, payload, aux, comm)
         new_st["resid"] = lag.tree_select(comm, aux["resid_new"],
                                           st["resid"])
+        return delta, new_st
+
+    def fast_precompute(self, plan, grads, st, *, theta, theta_stacked,
+                        grad_at_hat=None):
+        # the whole LAQ encode — absmax sweep + fused quantize/residual/
+        # trigger-sqnorm sweep — as TWO batched launches for all workers,
+        # per-(worker, leaf) quantizer scales preserved by the layout's
+        # static block→leaf table
+        payload, resid_new, lhs = plan.laq_encode(
+            grads, st["grad_hat"], st["resid"], bits=self.bits)
+        return {"payload": payload, "resid_new": resid_new, "lhs_sq": lhs}
+
+    def fast_decode(self, plan, st: PolicyState, payload: Pytree,
+                    aux: Dict[str, Any], comm: jnp.ndarray, *,
+                    theta: Pytree, theta_stacked: bool
+                    ) -> Tuple[Pytree, PolicyState]:
+        # base fold masks the payload into q̂; the residual advances by an
+        # exact SELECT (e ← v − Q(v) on upload, unchanged on skip)
+        delta, new_st = super().fast_decode(plan, st, payload, aux, comm,
+                                            theta=theta,
+                                            theta_stacked=theta_stacked)
+        new_st["resid"] = plan.masked_select(aux["resid_new"], st["resid"],
+                                             comm)
         return delta, new_st
 
     def wire_bytes(self, grad_like: Pytree) -> float:

@@ -34,6 +34,12 @@ class GDPolicy(CommPolicy):
                       aux: Dict[str, Any]) -> jnp.ndarray:
         return jnp.ones((), bool)
 
+    def fast_precompute(self, plan, grads, st, *, theta, theta_stacked,
+                        grad_at_hat=None):
+        # explicit opt-out: GD has no trigger reduction or encode sweep to
+        # serve from the plane — the round is pure elementwise math
+        return None
+
 
 class LAGWKPolicy(CommPolicy):
     """LAG with the worker-side trigger (15a).
@@ -45,8 +51,15 @@ class LAGWKPolicy(CommPolicy):
 
     def should_upload(self, ctx: CommRound, st: PolicyState, payload: Pytree,
                       aux: Dict[str, Any]) -> jnp.ndarray:
-        lhs = self.sqnorm_fn(payload)
+        if ctx.fast is not None and "lhs_sq" in ctx.fast:
+            lhs = ctx.fast["lhs_sq"]      # one batched launch, all workers
+        else:
+            lhs = self.sqnorm_fn(payload)
         return lhs > lag.trigger_rhs(ctx.hist, ctx.cfg)
+
+    def fast_precompute(self, plan, grads, st, *, theta, theta_stacked,
+                        grad_at_hat=None):
+        return {"lhs_sq": plan.delta_sqnorm(grads, st["grad_hat"])}
 
 
 class LAGPSPolicy(CommPolicy):
@@ -62,8 +75,18 @@ class LAGPSPolicy(CommPolicy):
                       aux: Dict[str, Any]) -> jnp.ndarray:
         if ctx.L_m is None:
             raise ValueError("LAG-PS requires per-worker smoothness L_m")
+        if ctx.fast is not None and "dtheta_sq" in ctx.fast:
+            lhs = (ctx.L_m.astype(jnp.float32) ** 2) * ctx.fast["dtheta_sq"]
+            return lhs > lag.trigger_rhs(ctx.hist, ctx.cfg)
         return lag.ps_communicate(ctx.theta, st["theta_hat"], ctx.L_m,
                                   ctx.hist, ctx.cfg, sqnorm_fn=self.sqnorm_fn)
+
+    def fast_precompute(self, plan, grads, st, *, theta, theta_stacked,
+                        grad_at_hat=None):
+        # 15b's iterate drift ‖θ̂_m − θ‖² for every worker at once; θ may
+        # be the shared (unstacked) iterate — broadcast in the kernel
+        return {"dtheta_sq": plan.delta_sqnorm(st["theta_hat"], theta,
+                                               b_stacked=theta_stacked)}
 
 
 class LASGWKPolicy(CommPolicy):
@@ -89,8 +112,18 @@ class LASGWKPolicy(CommPolicy):
 
     def should_upload(self, ctx: CommRound, st: PolicyState, payload: Pytree,
                       aux: Dict[str, Any]) -> jnp.ndarray:
+        if ctx.fast is not None and "lhs_sq" in ctx.fast:
+            return ctx.fast["lhs_sq"] > lag.trigger_rhs(ctx.hist, ctx.cfg)
         if ctx.grad_at_hat is None:
             raise ValueError("LASG-WK requires grad_at_hat (the driver must "
                              "evaluate ∇ℓ_m(θ̂_m) on the current sample)")
         lhs = self.sqnorm_fn(lag.tree_sub(ctx.grad_new, ctx.grad_at_hat))
         return lhs > lag.trigger_rhs(ctx.hist, ctx.cfg)
+
+    def fast_precompute(self, plan, grads, st, *, theta, theta_stacked,
+                        grad_at_hat=None):
+        if grad_at_hat is None:
+            raise ValueError("LASG-WK requires grad_at_hat (the driver must "
+                             "evaluate ∇ℓ_m(θ̂_m) on the current sample)")
+        # the correlated stochastic trigger: ‖∇ℓ(θ^k;ξ) − ∇ℓ(θ̂;ξ)‖²
+        return {"lhs_sq": plan.delta_sqnorm(grads, grad_at_hat)}

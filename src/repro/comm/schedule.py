@@ -87,7 +87,10 @@ class ScheduledPolicy(CommPolicy):
     """
 
     def __init__(self, inner: CommPolicy, schedule: Schedule):
-        super().__init__(sqnorm_fn=inner.sqnorm_fn)
+        # mirror the inner policy's resolved fast-path plan (may be None):
+        # scheduled payloads (cyc-LAQ's encode) still ride the batched
+        # plane; the schedule only replaces the upload decision
+        super().__init__(sqnorm_fn=inner.sqnorm_fn, fastpath=inner.fastpath)
         self.inner = inner
         self.schedule = schedule
         self.name = f"{schedule.name}-{inner.name}"
@@ -115,6 +118,18 @@ class ScheduledPolicy(CommPolicy):
                aux: Dict[str, Any], comm: jnp.ndarray
                ) -> Tuple[Pytree, PolicyState]:
         return self.inner.decode(ctx, st, payload, aux, comm)
+
+    def fast_precompute(self, plan, grads, st, *, theta, theta_stacked,
+                        grad_at_hat=None):
+        return self.inner.fast_precompute(plan, grads, st, theta=theta,
+                                          theta_stacked=theta_stacked,
+                                          grad_at_hat=grad_at_hat)
+
+    def fast_decode(self, plan, st, payload, aux, comm, *, theta,
+                    theta_stacked):
+        return self.inner.fast_decode(plan, st, payload, aux, comm,
+                                      theta=theta,
+                                      theta_stacked=theta_stacked)
 
     def wire_bytes(self, grad_like: Pytree) -> float:
         return self.inner.wire_bytes(grad_like)

@@ -46,7 +46,8 @@ def run(problem: Problem, algo: str, *, K: int = 2000,
         D: int = 10, xi: Optional[float] = None, alpha: Optional[float] = None,
         seed: int = 0, theta0: Optional[jnp.ndarray] = None,
         opt_loss: Optional[float] = None, l1: float = 0.0,
-        policy=None, bits: int = 4, server=None, rhs_floor: float = 0.0):
+        policy=None, bits: int = 4, server=None, rhs_floor: float = 0.0,
+        fastpath: Optional[str] = None):
     """Simulate ``K`` rounds of ``algo`` on ``problem`` → ``RunReport``.
 
     Defaults follow the paper: α = 1/L for GD/LAG/LAQ/LASG and 1/(M·L) for
@@ -61,6 +62,8 @@ def run(problem: Problem, algo: str, *, K: int = 2000,
     ``repro.engine.server`` spec (e.g. ``"adam"`` for LAG-Adam in the
     convex sim); ``rhs_floor`` floors the trigger RHS against the f32
     exact-convergence underflow quirk (see ``repro.core.lag.LAGConfig``).
+    ``fastpath`` forwards to the engine's batched-comm-plane knob
+    (``repro.fastpath``; None → "auto": ON on TPU, oracle on CPU).
     """
     from repro.engine import Experiment   # function-level: core ↔ engine
 
@@ -69,7 +72,8 @@ def run(problem: Problem, algo: str, *, K: int = 2000,
     return Experiment(problem=problem, algo=algo, steps=K, D=D, xi=xi,
                       alpha=alpha, seed=seed, theta0=theta0,
                       opt_loss=opt_loss, l1=l1, policy=policy, bits=bits,
-                      server=server, rhs_floor=rhs_floor).run()
+                      server=server, rhs_floor=rhs_floor,
+                      fastpath=fastpath).run()
 
 
 def __getattr__(name):

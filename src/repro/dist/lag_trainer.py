@@ -90,10 +90,17 @@ class TrainerConfig:
     with any ``repro.engine.server`` spec (``"prox-l1@1e-4"``,
     ``"momentum@0.9"``, …).  ``rhs_floor`` floors the trigger RHS against
     the f32 exact-convergence underflow quirk; ``laq_bits`` sets LAQ's
-    quantization width; ``use_pallas_comm`` routes the trigger
-    squared-norms AND LAQ's encode through the fused Pallas kernels in
-    ``repro.kernels.lag_trigger`` (default off: on CPU the kernels run in
-    interpret mode, which is for validation, not speed).
+    quantization width.  ``fastpath`` resolves the batched flat-buffer
+    comm plane (``repro.fastpath``) — the DEFAULT hot path on TPU
+    (``"auto"``): one Pallas launch per round for all workers' trigger
+    sqnorms / LAQ encode / masked updates instead of per-leaf per-worker
+    loops; ``"on"`` forces it (interpret mode off-TPU, parity only).
+    ``use_pallas_comm`` keeps the legacy per-leaf route (the fused
+    per-leaf kernels in ``repro.kernels.lag_trigger``) reachable for
+    comparison — selecting it disables an ``"auto"`` plane on every
+    backend (the plane would silently shadow it on TPU otherwise), and
+    combining it with ``fastpath="on"`` raises.
+    ``benchmarks/perf_comm.py`` measures all three routes.
     """
     algo: str = "lag-wk"
     num_workers: int = 4
@@ -105,7 +112,10 @@ class TrainerConfig:
     adam_b1: float = 0.9
     adam_b2: float = 0.999
     laq_bits: int = 4               # LAQ quantization width [b]
-    use_pallas_comm: bool = False   # fused Pallas sqnorm + LAQ encode
+    use_pallas_comm: bool = False   # legacy per-leaf Pallas sqnorm/encode
+    fastpath: str = "auto"          # batched flat-buffer comm plane
+    #   (repro.fastpath): "auto" = ON on TPU / jnp oracle on CPU, "on"
+    #   forces it (interpret-mode parity off-TPU), "off" disables
     server: Optional[str] = None    # repro.engine.server spec override
     rhs_floor: float = 0.0          # trigger-RHS floor (f32 quirk knob)
 
@@ -117,6 +127,14 @@ class TrainerConfig:
             comm.make_policy(self.algo, bits=self.laq_bits)
         if self.server is not None:
             server_lib.make_server(self.server)   # validate spec early
+        from repro import fastpath as fastpath_lib
+        fastpath_lib.make_plan(self.fastpath)     # validate mode early
+        if self.use_pallas_comm and self.fastpath == "on":
+            raise ValueError(
+                "conflicting comm-plane configs: use_pallas_comm=True "
+                "selects the legacy per-leaf Pallas route but "
+                "fastpath='on' forces the batched plane — pass one of "
+                "them (use_pallas_comm alone implies fastpath='off')")
 
     @property
     def uses_adam(self) -> bool:
@@ -145,7 +163,8 @@ class TrainerConfig:
             sqnorm_fn = lag_ops.fused_tree_sqnorm
         return comm.make_policy(self.algo, bits=self.laq_bits,
                                 use_pallas=self.use_pallas_comm,
-                                sqnorm_fn=sqnorm_fn)
+                                sqnorm_fn=sqnorm_fn,
+                                fastpath=self.fastpath)
 
     def server_optimizer(self) -> server_lib.ServerOptimizer:
         """The ``repro.engine.server`` optimizer this config selects:

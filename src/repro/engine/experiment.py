@@ -73,6 +73,11 @@ class Experiment:
     bits: int = 4                        # LAQ width (spec '@b' overrides)
     l1: float = 0.0                      # sugar for server="prox-l1@<l1>"
     rhs_floor: float = 0.0               # trigger-RHS floor (f32 quirk knob)
+    fastpath: Optional[str] = None       # batched comm plane (repro.fastpath):
+    #   None → "auto" (ON on TPU, jnp oracle on CPU), "on" forces the
+    #   flat-buffer Pallas plane (interpret mode off-TPU — the parity
+    #   tier / perf bench), "off" disables it.  Ignored when policy= is
+    #   an object override (the object's own resolved plan wins).
     policy: Optional[Any] = None         # CommPolicy object override
     cluster: Optional[Any] = None        # repro.netsim cluster spec/object;
     #   when set, the run is priced through the event-driven cost model and
@@ -161,7 +166,8 @@ class Experiment:
                     policy, comm_lib.SCHEDULES[prefix](probs))
             return policy
         return comm_lib.make_policy(self.algo, bits=self.bits, probs=probs,
-                                    sqnorm_fn=sqnorm_fn)
+                                    sqnorm_fn=sqnorm_fn,
+                                    fastpath=self.fastpath or "auto")
 
     # -- convex -------------------------------------------------------------
 

@@ -30,6 +30,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import fastpath as fastpath_lib
 from repro.comm import CommPolicy, CommRound, run_round
 from repro.core import lag
 from repro.engine.server import ServerOptimizer
@@ -71,6 +72,16 @@ def policy_rounds(policy: CommPolicy, lagcfg: lag.LAGConfig, params: Pytree,
     ``decode``'s θ̂ refresh) are evaluated against the worker's own stale
     iterate — not the server's current one.  None (default, every sync
     topology) broadcasts the shared ``params``.
+
+    Fast path: when the policy carries an ACTIVE ``repro.fastpath`` plan,
+    the kernel-served per-round quantities (trigger sqnorms, the LAQ
+    encode) are computed ONCE for all workers — batched flat-buffer
+    Pallas launches — via ``policy.fast_precompute`` before the vmap;
+    each worker's slice arrives through ``ctx.fast``, and the state fold
+    (masked lazy updates) runs batched through ``policy.fast_decode``
+    after the vmapped trigger.  Policies with nothing kernel-served
+    (``fast_precompute`` → None) take the plain vmapped round; float64
+    trees fall back in ``auto`` mode and raise under a forced plan.
     """
     W = jax.tree_util.tree_leaves(grads)[0].shape[0]
     pst = {k: lag_state[k] for k in policy.state_keys}
@@ -81,20 +92,53 @@ def policy_rounds(policy: CommPolicy, lagcfg: lag.LAGConfig, params: Pytree,
     k_idx = jnp.zeros((), jnp.int32) if step is None \
         else jnp.asarray(step, jnp.int32)
     worker_ids = jnp.arange(W, dtype=jnp.int32)
+    theta_stacked = theta_view is not None
+    theta_arg = theta_view if theta_stacked else params
+    th_ax = 0 if theta_stacked else None
 
-    def one_worker(g, pst_m, gah_m, lm, wid, theta_m):
+    plan = fastpath_lib.active_plan(policy)
+    if plan is not None and not plan.supports(grads):
+        if plan.forced:
+            raise ValueError(
+                f"fastpath='on' but the gradient tree has leaf dtypes the "
+                f"float32 comm plane cannot serve (e.g. float64 under "
+                f"jax_enable_x64): "
+                f"{sorted({str(l.dtype) for l in jax.tree_util.tree_leaves(grads)})}"
+                f" — use fastpath='auto'/'off' for x64 runs")
+        plan = None
+    fast = None
+    if plan is not None:
+        fast = policy.fast_precompute(plan, grads, pst, theta=theta_arg,
+                                      theta_stacked=theta_stacked,
+                                      grad_at_hat=grad_at_hat)
+
+    if fast is None:
+        def one_worker(g, pst_m, gah_m, lm, wid, theta_m):
+            ctx = CommRound(theta=theta_m, grad_new=g, hist=hist, cfg=lagcfg,
+                            L_m=lm, grad_at_hat=gah_m, k=k_idx,
+                            worker_id=wid, key=key)
+            return run_round(policy, ctx, pst_m)
+
+        comm, delta, new_pst = jax.vmap(
+            one_worker, in_axes=(0, 0, 0, 0, 0, th_ax))(
+            grads, pst, gah, L_arr, worker_ids, theta_arg)
+        return comm, delta, new_pst
+
+    # fast route: encode + trigger stay per-worker (cheap — the heavy
+    # reductions arrive precomputed in fast_m), the state fold is batched
+    def enc_and_trigger(g, pst_m, gah_m, lm, wid, theta_m, fast_m):
         ctx = CommRound(theta=theta_m, grad_new=g, hist=hist, cfg=lagcfg,
                         L_m=lm, grad_at_hat=gah_m, k=k_idx, worker_id=wid,
-                        key=key)
-        return run_round(policy, ctx, pst_m)
+                        key=key, fast=fast_m)
+        payload, aux = policy.encode(ctx, pst_m)
+        return policy.should_upload(ctx, pst_m, payload, aux), payload, aux
 
-    if theta_view is None:
-        comm, delta, new_pst = jax.vmap(
-            one_worker, in_axes=(0, 0, 0, 0, 0, None))(
-            grads, pst, gah, L_arr, worker_ids, params)
-    else:
-        comm, delta, new_pst = jax.vmap(one_worker)(
-            grads, pst, gah, L_arr, worker_ids, theta_view)
+    comm, payload, aux = jax.vmap(
+        enc_and_trigger, in_axes=(0, 0, 0, 0, 0, th_ax, 0))(
+        grads, pst, gah, L_arr, worker_ids, theta_arg, fast)
+    delta, new_pst = policy.fast_decode(plan, pst, payload, aux, comm,
+                                        theta=theta_arg,
+                                        theta_stacked=theta_stacked)
     return comm, delta, new_pst
 
 

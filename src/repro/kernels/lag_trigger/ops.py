@@ -1,6 +1,14 @@
 """jit'd public wrappers: arbitrary-shape / pytree entry points that pad and
 reshape into the kernel's (rows, 128) layout.  On CPU (no Mosaic) the
-kernels run in interpret mode; ``use_ref=True`` selects the jnp oracle."""
+kernels run in interpret mode; ``use_ref=True`` selects the jnp oracle.
+
+NOTE — these wrappers launch one kernel PER LEAF (and per worker, under
+vmap), and the multi-leaf reductions accumulate leaf partials in
+host-side loop order.  They remain as the legacy ``use_pallas_comm``
+route and the per-leaf baseline ``benchmarks/perf_comm.py`` compares
+against; the DEFAULT accelerated hot path is ``repro.fastpath`` — one
+batched flat-buffer launch per round for all workers, with a
+deterministic per-(worker, leaf-offset) reduction order."""
 from __future__ import annotations
 
 import functools

@@ -55,6 +55,11 @@ def build_argparser():
                    help="price the run on a simulated network, e.g. "
                         "'hetero:8@10ms/1Gbps' (repro.netsim.make_cluster "
                         "spec; worker count must match --workers)")
+    p.add_argument("--fastpath", default="auto",
+                   choices=["auto", "on", "off"],
+                   help="batched flat-buffer comm plane (repro.fastpath): "
+                        "auto = ON on TPU / jnp oracle on CPU, on = force "
+                        "(interpret-mode Pallas off-TPU)")
     p.add_argument("--reduced", action="store_true",
                    help="CPU-sized variant of the arch")
     p.add_argument("--mesh", default="host", choices=["host", "prod", "prod2"])
@@ -73,7 +78,7 @@ def main(argv=None):
         cfg = cfg.reduced()
     tcfg = TrainerConfig(algo=args.algo, num_workers=args.workers,
                          lr=args.lr, D=args.D, xi=args.xi,
-                         server=args.server)
+                         server=args.server, fastpath=args.fastpath)
     mesh = {"host": make_host_mesh,
             "prod": lambda: make_production_mesh(multi_pod=False),
             "prod2": lambda: make_production_mesh(multi_pod=True)}[args.mesh]()
