@@ -21,7 +21,7 @@ from roofline import load_records, roofline_row  # noqa: E402
 
 #: every marker this script owns — the docs-integrity check's source of truth
 MARKERS = ("DRYRUN_TABLE", "ROOFLINE_TABLE", "NETSIM_TABLE",
-           "PERF_COMM_TABLE")
+           "PERF_COMM_TABLE", "FLEET_TABLE")
 
 
 def dryrun_table(dryrun_dir: str) -> str:
@@ -137,6 +137,50 @@ def perf_comm_table(bench_path: str) -> str:
     return "\n".join(out)
 
 
+def fleet_table(bench_path: str) -> str:
+    """BENCH_fleet.json → the §Fleet population-scale tables."""
+    with open(bench_path) as fh:
+        rec = json.load(fh)
+    out = [f"Cluster `{rec['cluster']}`, algo `{rec['algo']}`, "
+           f"K = {rec['K']} rounds "
+           "(`python -m benchmarks.fleet_scale`):",
+           "",
+           "| N clients | cohort k | gap₀ → gap_K | uploads / GD budget "
+           "| max uploads/round | priced wall-clock s |",
+           "|---|---|---|---|---|---|"]
+    for r in rec["scale"]:
+        out.append(
+            f"| {r['N']:,} | {r['k']} "
+            f"| {r['gap0']:.3g} → {r['gapK']:.3g} "
+            f"| {r['uploads']:,} / {r['upload_budget']:,} "
+            f"| {r['max_round_uploads']} "
+            f"| {r['wall_seconds']:.1f} |")
+    out += ["", f"Cohort size vs progress at N = {rec['cohort'][0]['N']:,}:",
+            "",
+            "| cohort k | final gap | uploads |",
+            "|---|---|---|"]
+    for r in rec["cohort"]:
+        out.append(f"| {r['k']} | {r['gapK']:.3g} | {r['uploads']:,} |")
+    out += ["", f"Churn × selection at N = {rec['dials'][0]['N']:,}, "
+            f"k = {rec['dials'][0]['k']}:",
+            "",
+            "| selection | churn | final gap | uploads |",
+            "|---|---|---|---|"]
+    for r in rec["dials"]:
+        out.append(f"| {r['selection']} | {r['churn']:g} "
+                   f"| {r['gapK']:.3g} | {r['uploads']:,} |")
+    p = rec["pricing"][0]
+    out += ["", f"Pricing-only at N = {p['N']:,}: {p['K']} cohorts of "
+            f"k = {p['k']} priced in {p['us_per_round']:g} µs/round "
+            f"(simulated wall-clock {p['wall_seconds']:.1f} s) — the "
+            "pricer walks cohorts, never the population."]
+    n_ok = sum(1 for c in rec["claims"] if c["ok"])
+    out.append(f"\n**{n_ok}/{len(rec['claims'])} fleet claims validated** "
+               "(gap shrinks at every N, uploads ≤ cohort, lazy savings, "
+               "monotone cohort sweep, deterministic 1e6-client pricing).")
+    return "\n".join(out)
+
+
 def splice(md: str, marker: str, content: str) -> str:
     pat = re.compile(rf"<!-- {marker} -->.*?(?=\n## |\Z)", re.S)
     repl = f"<!-- {marker} -->\n\n{content}\n"
@@ -161,6 +205,8 @@ def main():
     if os.path.exists("BENCH_perf_comm.json"):
         md = splice(md, "PERF_COMM_TABLE",
                     perf_comm_table("BENCH_perf_comm.json"))
+    if os.path.exists("BENCH_fleet.json"):
+        md = splice(md, "FLEET_TABLE", fleet_table("BENCH_fleet.json"))
     open(path, "w").write(md)
     print("EXPERIMENTS.md tables updated")
 

@@ -125,8 +125,14 @@ class Experiment:
             # the broadcast moves DENSE params even when uploads are
             # quantized, so it is sized separately from bytes_per_upload
             from repro.netsim import cluster as netsim_cluster
-            netsim_cluster.price_report(report, self.cluster,
-                                        dense_bytes=dense)
+            if "cohort_ids" in report.extras:
+                # fleet runs: price only the k sampled uplinks per round
+                # (O(K·k), never O(K·N)) via the cohort-aware pricer
+                netsim_cluster.price_fleet_report(report, self.cluster,
+                                                  dense_bytes=dense)
+            else:
+                netsim_cluster.price_report(report, self.cluster,
+                                            dense_bytes=dense)
         return report
 
     # -- shared resolution --------------------------------------------------
@@ -193,6 +199,16 @@ class Experiment:
         policy = self._resolve_policy(probs=probs)
         server = self._resolve_server()
         topo = make_topology(self.topology or "sim", mesh=self.mesh)
+        if getattr(topo, "name", None) == "fleet":
+            # cohort-sampled convex rounds over an N-client population
+            # (function-level import: repro.fleet consumes the engine)
+            from repro import fleet as fleet_lib
+            report = fleet_lib.run_convex(prob, policy, server, cfg, topo,
+                                          K=self.steps, seed=self.seed,
+                                          theta0=self.theta0,
+                                          opt_loss=self.opt_loss)
+            report.algo = self.algo
+            return report
         if not isinstance(topo, SimWorkers):
             raise ValueError(
                 f"convex problems run on the 'sim' topology, got "
@@ -234,15 +250,28 @@ class Experiment:
         policy = self._resolve_policy()
         server = self._resolve_server()
 
-        state = lag_trainer.init_state(jax.random.PRNGKey(self.seed), cfg,
-                                       tcfg, policy=policy, server=server,
-                                       topology=topo)
-        step_fn = jax.jit(lag_trainer.make_train_step(
-            cfg, tcfg, policy=policy, server=server, topology=topo,
-            schedule_seed=self.seed))
+        if getattr(topo, "name", None) == "fleet":
+            # fleet state/step: flat population arrays, cohort-sized
+            # rounds (function-level import — repro.fleet consumes the
+            # engine, like repro.dist)
+            from repro import fleet as fleet_lib
+            state = fleet_lib.init_fleet_state(
+                jax.random.PRNGKey(self.seed), cfg, tcfg, topo,
+                policy=policy, server=server)
+            step_fn = jax.jit(fleet_lib.make_fleet_step(
+                cfg, tcfg, topo, policy=policy, server=server,
+                schedule_seed=self.seed))
+        else:
+            state = lag_trainer.init_state(jax.random.PRNGKey(self.seed),
+                                           cfg, tcfg, policy=policy,
+                                           server=server, topology=topo)
+            step_fn = jax.jit(lag_trainer.make_train_step(
+                cfg, tcfg, policy=policy, server=server, topology=topo,
+                schedule_seed=self.seed))
         stream = TokenStream(vocab=cfg.vocab_size, seed=self.seed)
 
         losses, masks, underflow = [], [], 0
+        cohorts, cohort_comm = [], []
         batch = None
         h = 1.0 if self.hetero is None else self.hetero
         for k in range(self.steps):
@@ -254,7 +283,16 @@ class Experiment:
             losses.append(float(m["loss"]))
             masks.append(np.asarray(jax.device_get(m["comm_mask"])))
             underflow += int(m["trigger_rhs_underflow"])
+            if "cohort_ids" in m:
+                cohorts.append(np.asarray(jax.device_get(m["cohort_ids"])))
+                cohort_comm.append(
+                    np.asarray(jax.device_get(m["cohort_comm"])))
         extras = {"trigger_rhs_underflow_rounds": underflow}
+        if cohorts:
+            extras["cohort_ids"] = np.stack(cohorts)
+            extras["cohort_comm"] = np.stack(cohort_comm)
+            extras["population"] = topo.population
+            extras["cohort"] = topo.cohort
         if self.hetero is not None:
             extras["hetero_dial"] = float(self.hetero)
         if "rounds_skipped" in state["lag"]:

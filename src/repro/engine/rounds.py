@@ -38,16 +38,27 @@ from repro.engine.server import ServerOptimizer
 Pytree = Any
 
 
-def comm_counter_updates(lag_state: Dict, comm: jnp.ndarray
+def comm_counter_updates(lag_state: Dict, comm: jnp.ndarray,
+                         index: Optional[jnp.ndarray] = None
                          ) -> Tuple[jnp.ndarray, Dict]:
-    """(int mask, {comm_total, comm_per_worker} updates) for this round."""
+    """(int mask, {comm_total, comm_per_worker} updates) for this round.
+
+    ``index`` maps each mask slot to its row in ``comm_per_worker`` when
+    the two differ — the fleet topology's cohort: ``comm`` is (k,) over
+    the sampled clients while the counter is per-client (N,), so the
+    update is a scatter-add at the cohort ids instead of a dense add.
+    """
     comm_i = comm.astype(jnp.int32)
+    if index is None:
+        per_worker = lag_state["comm_per_worker"] + comm_i
+    else:
+        per_worker = lag_state["comm_per_worker"].at[index].add(comm_i)
     # sum with an explicit dtype: under jax_enable_x64 a bare int32 sum
     # promotes to int64 and breaks the scan-carry contract
     return comm_i, {
         "comm_total": lag_state["comm_total"]
         + jnp.sum(comm_i, dtype=jnp.int32),
-        "comm_per_worker": lag_state["comm_per_worker"] + comm_i,
+        "comm_per_worker": per_worker,
     }
 
 

@@ -320,12 +320,25 @@ class SimWorkers(Topology):
 # Registry + spec parsing
 # ---------------------------------------------------------------------------
 
+def _make_fleet(population=None, cohort=None, mesh=None, **kw):
+    """Lazy ``repro.fleet`` factory: the fleet topology imports the engine
+    round seam, so importing it here at module scope would close a cycle."""
+    from repro.fleet.topology import FleetTopology
+    return FleetTopology(population=population, cohort=cohort, mesh=mesh,
+                         **kw)
+
+
 TOPOLOGIES = {
     "sim": SimWorkers,
     "shards": BatchShards,
     "pods": PodMesh,
     "async": AsyncShards,
+    "fleet": _make_fleet,
 }
+
+_FLEET_GRAMMAR = ("fleet needs BOTH a population and a cohort size — "
+                  "'fleet:<population>@<cohort>', e.g. 'fleet:100000@64' "
+                  "(sample 64 of 100000 clients per round)")
 
 
 def make_topology(spec, mesh=None) -> Topology:
@@ -334,8 +347,10 @@ def make_topology(spec, mesh=None) -> Topology:
     Grammar: ``<name>[:<units>][@<staleness>]`` — ``"sim"``,
     ``"shards"``, ``"pods:2"`` (two lazy pods), ``"async:4@2"`` (four
     bounded-staleness workers, slowest 2 rounds behind; ``"async"``
-    alone defaults to staleness 1).  ``mesh`` reaches placement-aware
-    backends (the pod axis pin).
+    alone defaults to staleness 1).  The fleet topology requires both
+    parts: ``"fleet:<population>@<cohort>"`` — ``"fleet:100000@64"``
+    samples a 64-client cohort per round from 10⁵ clients.  ``mesh``
+    reaches placement-aware backends (the pod axis pin).
     """
     if isinstance(spec, Topology):
         return spec
@@ -348,13 +363,39 @@ def make_topology(spec, mesh=None) -> Topology:
     if name not in TOPOLOGIES:
         raise ValueError(f"unknown topology {spec!r}; known: "
                          f"{tuple(TOPOLOGIES)} (optionally ':<units>', "
-                         f"e.g. 'pods:2'; async also takes '@<staleness>')")
+                         f"e.g. 'pods:2'; async also takes '@<staleness>'; "
+                         f"fleet needs 'fleet:<population>@<cohort>')")
+    if name == "fleet":
+        if not sep or not sep_at:
+            raise ValueError(f"bad topology spec {spec!r}: "
+                             f"{_FLEET_GRAMMAR}")
+        try:
+            population = int(units)
+        except ValueError:
+            raise ValueError(
+                f"bad topology spec {spec!r}: ':{units}' is not an integer "
+                f"population — {_FLEET_GRAMMAR}") from None
+        try:
+            cohort = int(stale_s)
+        except ValueError:
+            raise ValueError(
+                f"bad topology spec {spec!r}: '@{stale_s}' is not an "
+                f"integer cohort size — {_FLEET_GRAMMAR}") from None
+        if population < 1:
+            raise ValueError(f"bad topology spec {spec!r}: population must "
+                             f"be >= 1 — {_FLEET_GRAMMAR}")
+        if not 1 <= cohort <= population:
+            raise ValueError(f"bad topology spec {spec!r}: cohort must be "
+                             f"in [1, population={population}] — "
+                             f"{_FLEET_GRAMMAR}")
+        return TOPOLOGIES["fleet"](population=population, cohort=cohort,
+                                   mesh=mesh)
     kwargs = {}
     if sep_at:
         if name != "async":
             raise ValueError(
-                f"bad topology spec {spec!r}: only 'async' takes an "
-                f"'@<staleness>' suffix (e.g. 'async:4@2')")
+                f"bad topology spec {spec!r}: only 'async' and 'fleet' "
+                f"take an '@' suffix (e.g. 'async:4@2', 'fleet:100000@64')")
         try:
             kwargs["staleness"] = int(stale_s)
         except ValueError:

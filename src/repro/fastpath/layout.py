@@ -139,8 +139,10 @@ class FlatLayout:
         W = leaves[0].shape[0]
         if self.nblocks == 0:
             return jnp.zeros((W, 0, LANES), jnp.float32)
+        # explicit rows (not -1): W may be 0 — an empty cohort stacks to
+        # an empty buffer instead of tripping reshape's inference
         return jnp.concatenate(self._flat_leaves(tree, (W,)),
-                               axis=1).reshape(W, -1, LANES)
+                               axis=1).reshape(W, self.rows, LANES)
 
     # -- scatter back -------------------------------------------------------
 
@@ -176,8 +178,75 @@ class FlatLayout:
     def unflatten_stacked(self, buf: jnp.ndarray, like: Any = None) -> Pytree:
         """``(W, rows, LANES)`` buffer → stacked template tree."""
         W = buf.shape[0]
-        flat = buf.reshape(W, -1)
+        flat = buf.reshape(W, self.rows * LANES)
         dts = self._out_dtypes(like)
         leaves = [self._leaf_from_flat(flat, i, (W,), dts[i])
                   for i in range(self.num_leaves)]
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+    # -- compact per-client views (the fleet population substrate) -----------
+    #
+    # ``flatten_stacked`` pads every buffer to whole KERNEL GRID blocks
+    # (BLOCK = 32768 elements) because the Pallas grid steps over them —
+    # the right trade for k cohort-sized launches, ruinous for a
+    # population mirror held for EVERY client (a 4-element convex leaf
+    # would cost 128 KiB per client).  ``pack_stacked``/``unpack_stacked``
+    # are the storage twins: same leaf order, same f32 convention, same
+    # ``like=`` scatter-dtype contract, but each leaf pads only to the
+    # LANES vector width and there is no grid tail — one ``(W,
+    # packed_cols)`` array, gather/scatter-friendly along the client dim.
+
+    @property
+    def leaf_lanes(self) -> Tuple[int, ...]:
+        """LANES-vectors per leaf in the packed view (0 for empty leaves)."""
+        return tuple(-(-s // LANES) for s in self.sizes)
+
+    @property
+    def leaf_lane_offsets(self) -> Tuple[int, ...]:
+        offs, acc = [], 0
+        for n in self.leaf_lanes:
+            offs.append(acc)
+            acc += n
+        return tuple(offs)
+
+    @property
+    def packed_cols(self) -> int:
+        """Columns of the compact ``(W, packed_cols)`` per-client view."""
+        return sum(self.leaf_lanes) * LANES
+
+    def pack_stacked(self, tree: Pytree) -> jnp.ndarray:
+        """Stacked ``(W, …leaf)`` tree → compact ``(W, packed_cols)``
+        float32 — per-leaf LANES padding only, no kernel-grid tail."""
+        leaves = jax.tree_util.tree_leaves(tree)
+        if len(leaves) != self.num_leaves:
+            raise ValueError(f"tree has {len(leaves)} leaves, layout expects "
+                             f"{self.num_leaves}")
+        W = leaves[0].shape[0]
+        segs = []
+        for l, size, lanes in zip(leaves, self.sizes, self.leaf_lanes):
+            if lanes == 0:
+                continue
+            flat = l.reshape((W, size)).astype(jnp.float32)
+            pad = lanes * LANES - size
+            if pad:
+                flat = jnp.pad(flat, [(0, 0), (0, pad)])
+            segs.append(flat)
+        if not segs:
+            return jnp.zeros((W, 0), jnp.float32)
+        return jnp.concatenate(segs, axis=1)
+
+    def unpack_stacked(self, buf: jnp.ndarray, like: Any = None) -> Pytree:
+        """Compact ``(W, packed_cols)`` buffer → stacked template tree."""
+        W = buf.shape[0]
+        dts = self._out_dtypes(like)
+        offs = self.leaf_lane_offsets
+        leaves = []
+        for i in range(self.num_leaves):
+            shape, size = self.shapes[i], self.sizes[i]
+            if self.leaf_lanes[i] == 0:
+                leaves.append(jnp.zeros((W,) + shape, dts[i]))
+                continue
+            off = offs[i] * LANES
+            seg = jax.lax.slice_in_dim(buf, off, off + size, axis=1)
+            leaves.append(seg.reshape((W,) + shape).astype(dts[i]))
         return jax.tree_util.tree_unflatten(self.treedef, leaves)

@@ -1,0 +1,29 @@
+"""repro.fleet — sampled-cohort federated rounds over huge populations.
+
+LAG's triggers assume every registered worker computes every round; a
+fleet deployment is the opposite — a small k-cohort sampled per round
+from N ≫ k churning clients.  This subsystem reinterprets the lazy
+machinery as SERVER-SIDE CLIENT SELECTION (the LASG reading, Chen et
+al. 2020): per-client state lives in flat packed arrays (memory in N
+only for those), each round gathers a cohort, runs it through the
+unchanged ``engine.rounds.policy_rounds`` seam — every ``CommPolicy``
+composes — and scatters the advanced state back (compute in O(k)).
+
+Spec: ``Experiment(topology="fleet:100000@64")``; churn and the
+selection rule are ``FleetTopology`` constructor dials.  See
+docs/ARCHITECTURE.md §"the fleet seam".
+"""
+from repro.fleet.population import INNOV_INIT, MIRROR_PREFIX, Population
+from repro.fleet.problems import fleet_problem
+from repro.fleet.rounds import (fleet_round, init_fleet_state,
+                                make_fleet_step, run_convex, sample_cohort)
+from repro.fleet.sampling import REJOIN, churn_step, gumbel_top_k
+from repro.fleet.selection import SELECTION_RULES, make_selection
+from repro.fleet.topology import FleetTopology
+
+__all__ = [
+    "FleetTopology", "Population", "INNOV_INIT", "MIRROR_PREFIX",
+    "fleet_problem", "fleet_round", "init_fleet_state", "make_fleet_step",
+    "run_convex", "sample_cohort", "churn_step", "gumbel_top_k", "REJOIN",
+    "SELECTION_RULES", "make_selection",
+]

@@ -1,0 +1,121 @@
+"""Flat per-client population state for fleet-scale lazy aggregation.
+
+A fleet run tracks N ≫ k virtual clients, but only the sampled k-cohort
+computes anything in a round.  Holding N pytree copies of the policy
+mirrors (``grad_hat``, ``theta_hat``, LAQ's ``resid``) would cost N
+Python leaf objects *and* N kernel-grid-padded buffers; instead every
+mirror lives in ONE compact ``(N, packed_cols)`` float32 array on the
+``repro.fastpath.FlatLayout`` substrate (``pack_stacked`` /
+``unpack_stacked`` — per-leaf LANES padding, no grid tail), plus three
+``(N,)`` bookkeeping vectors:
+
+  fleet_alive   bool, the churn process (clients leave / re-join; a
+                departed client's mirrors persist — it re-joins stale)
+  fleet_age     int32 rounds since the client last participated
+  fleet_innov   float32 last measured innovation ‖∇L_m − ĝ_m‖², the
+                lazy-selection score (initialized huge so never-polled
+                clients are drawn first)
+
+The round-side seam is gather → policy → scatter:
+
+  ``gather_state``   mirror[cohort] rows → stacked (k, …) pytrees, the
+                     exact state dict ``engine.rounds.policy_rounds``
+                     vmaps over
+  ``scatter_state``  fold the cohort's advanced state back into the
+                     population rows (inactive rows keep their old
+                     values — mid-round dropouts revert)
+
+Everything here is jit/scan-safe; the layout object itself is static
+trace-time data captured by the step closure, never part of the state
+pytree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.fastpath.layout import FlatLayout
+
+Pytree = Any
+
+#: never-polled clients carry this innovation score, so the lazy
+#: selection rule drafts them before any measured client
+INNOV_INIT = 1e30
+
+#: lag-group key prefix for the packed mirrors ("fleet_m_grad_hat", …);
+#: bookkeeping vectors use "fleet_" directly — both survive checkpointing
+#: as ordinary lag-state arrays
+MIRROR_PREFIX = "fleet_m_"
+
+
+@dataclasses.dataclass(frozen=True)
+class Population:
+    """Static description of one fleet population's flat state."""
+    size: int                        # N clients
+    layout: FlatLayout               # of the UNSTACKED mirror template
+    state_keys: Tuple[str, ...]      # policy mirror keys (pytree-valued)
+
+    @classmethod
+    def for_template(cls, template: Pytree, state_keys, size: int
+                     ) -> "Population":
+        """Population over ``size`` clients whose mirrors are shaped like
+        ``template`` (the param/gradient pytree)."""
+        if size < 1:
+            raise ValueError(f"population size must be >= 1, got {size}")
+        return cls(size=int(size), layout=FlatLayout.for_tree(template),
+                   state_keys=tuple(state_keys))
+
+    # -- state construction ---------------------------------------------------
+
+    def init_state(self) -> Dict[str, jnp.ndarray]:
+        """Fresh flat population state: zero mirrors (the all-upload-on-
+        first-contact init, matching the deep trainer's zero ``grad_hat``)
+        plus the bookkeeping vectors."""
+        N = self.size
+        st = {MIRROR_PREFIX + k: jnp.zeros((N, self.layout.packed_cols),
+                                           jnp.float32)
+              for k in self.state_keys}
+        st["fleet_alive"] = jnp.ones((N,), bool)
+        st["fleet_age"] = jnp.zeros((N,), jnp.int32)
+        st["fleet_innov"] = jnp.full((N,), INNOV_INIT, jnp.float32)
+        return st
+
+    def mirror_keys(self) -> Tuple[str, ...]:
+        return tuple(MIRROR_PREFIX + k for k in self.state_keys)
+
+    # -- the gather / scatter seam --------------------------------------------
+
+    def gather_state(self, lag_state: Dict, cohort: jnp.ndarray,
+                     like: Pytree = None) -> Dict[str, Pytree]:
+        """Cohort rows of every mirror, unpacked to stacked (k, …) pytrees
+        — the per-unit state ``policy_rounds`` consumes.  ``like`` sets
+        the scatter dtypes (the param tree; float32 round-trips exactly)."""
+        out = {}
+        for k in self.state_keys:
+            rows = lag_state[MIRROR_PREFIX + k][cohort]
+            out[k] = self.layout.unpack_stacked(rows, like=like)
+        return out
+
+    def scatter_state(self, lag_state: Dict, cohort: jnp.ndarray,
+                      new_pst: Dict[str, Pytree],
+                      active: Optional[jnp.ndarray] = None) -> Dict:
+        """Pack the cohort's advanced policy state and fold it back into
+        the population rows.  ``active`` (k,) masks mid-round dropouts:
+        inactive rows keep their previous packed values exactly."""
+        updates = {}
+        for k in self.state_keys:
+            key = MIRROR_PREFIX + k
+            packed = self.layout.pack_stacked(new_pst[k])
+            if active is not None:
+                packed = jnp.where(active[:, None], packed,
+                                   lag_state[key][cohort])
+            updates[key] = lag_state[key].at[cohort].set(packed)
+        return updates
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"Population(N={self.size}, "
+                f"packed_cols={self.layout.packed_cols}, "
+                f"mirrors={self.state_keys})")

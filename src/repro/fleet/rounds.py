@@ -1,0 +1,365 @@
+"""Fleet rounds: sample a k-cohort, run it through THE engine round seam,
+fold the results back into the N-client population arrays.
+
+One fleet round (deep and convex drivers share :func:`fleet_round`):
+
+  1. **churn + sample** — advance the Markov alive mask, score clients
+     (``selection``), draw a sorted k-cohort (``sampling.gumbel_top_k``);
+  2. **gather** — slice the cohort's rows out of the packed population
+     mirrors and unpack them to stacked (k, …) pytrees
+     (``population.gather_state``) — the exact per-unit state dict
+     ``engine.rounds.policy_rounds`` vmaps over;
+  3. **the shared round** — ``policy_rounds`` runs every ``CommPolicy``
+     (triggers, LAQ encode, schedules, the fastpath plan) over the
+     cohort UNCHANGED: a fleet round is an ordinary k-worker round from
+     the policy's point of view;
+  4. **server step** — the aggregate ∇^k recursion (eq. 4, summed over
+     ALL N stale gradients — the cohort's masked deltas are the only
+     terms that move), the pluggable server update, the iterate-lag
+     history push: identical to ``engine.rounds.lag_round``'s tail;
+  5. **scatter** — pack the cohort's advanced mirrors back into the
+     population rows; refresh age/innovation bookkeeping; clients that
+     dropped out mid-round (churn) revert exactly (their delta is
+     zeroed, so the ∇^k = Σ_m ĝ_m invariant survives).
+
+Per-round compute and memory touch O(k) + the flat (N,)-vectors; the
+only O(N·cols) arrays are the packed mirrors themselves.  With churn 0,
+uniform selection and k = N the cohort is the identity permutation and
+every step above degenerates bit-exactly to the sync trainer's round
+(golden-pinned by tests/test_fleet.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lag
+from repro.engine import rounds as engine_rounds
+from repro.engine.report import RunReport
+from repro.fleet import sampling
+from repro.fleet.population import MIRROR_PREFIX, Population
+from repro.fleet.selection import make_selection
+
+Pytree = Any
+
+
+def _innovation(grads: Pytree, grad_hat: Pytree) -> jnp.ndarray:
+    """(k,) per-client ‖∇L_m − ĝ_m‖² — the LAG trigger LHS, carried
+    forward as the client's lazy-selection score."""
+    def per_leaf(g, gh):
+        d = (g.astype(jnp.float32) - gh.astype(jnp.float32))
+        return jnp.sum(d.reshape(d.shape[0], -1) ** 2, axis=1)
+    parts = jax.tree_util.tree_map(per_leaf, grads, grad_hat)
+    return sum(jax.tree_util.tree_leaves(parts))
+
+
+def sample_cohort(topology, lag_state: Dict, skey: jnp.ndarray):
+    """(alive', cohort, active) for one round.
+
+    ``alive'`` is the post-churn population mask, ``cohort`` the sorted
+    k client ids, ``active`` = ``alive'[cohort]`` — the round's
+    participation mask (all-True whenever churn is structurally off).
+    """
+    ksel, kchurn = jax.random.split(skey)
+    alive = sampling.churn_step(kchurn, lag_state["fleet_alive"],
+                                topology.churn)
+    scores = make_selection(topology.selection)(lag_state)
+    cohort = sampling.gumbel_top_k(ksel, scores, alive, topology.cohort)
+    return alive, cohort, alive[cohort]
+
+
+def fleet_round(policy, server, lagcfg: lag.LAGConfig, *, topology,
+                population: Population, params: Pytree,
+                opt_state: Optional[Pytree], lag_state: Dict,
+                alive: jnp.ndarray, cohort: jnp.ndarray,
+                active: jnp.ndarray, cohort_pst: Dict[str, Pytree],
+                grads: Pytree, step: jnp.ndarray,
+                grad_at_hat: Optional[Pytree] = None,
+                key: Optional[jnp.ndarray] = None,
+                L_cohort: Optional[jnp.ndarray] = None
+                ) -> Tuple[Pytree, Optional[Pytree], Dict, Dict]:
+    """One sampled-cohort lazy-aggregation round (steps 3–5 above).
+
+    ``cohort_pst`` is the pre-gathered mirror state (step 2 — the caller
+    gathers so it can reuse e.g. ``theta_hat`` for the LASG backward
+    pass).  Returns ``(new_params, new_opt_state, new_lag_state,
+    metrics)`` with the same metric keys as ``engine.rounds.lag_round``
+    plus the cohort fields (``cohort_ids``/``cohort_comm``/
+    ``cohort_active``) the fleet pricer consumes.
+    """
+    churny = topology.churn != 0.0
+    k = topology.cohort
+    cohort_lag = dict(cohort_pst, hist=lag_state["hist"])
+    if policy.needs_L_m:
+        if L_cohort is None:
+            raise ValueError(f"policy {policy.name!r} needs per-unit L_m — "
+                             f"pass L_cohort (the cohort's smoothness rows)")
+        cohort_lag["L_m"] = L_cohort
+
+    comm, delta, new_pst = engine_rounds.policy_rounds(
+        policy, lagcfg, params, grads, cohort_lag, grad_at_hat,
+        step=step, key=key)
+
+    if churny:
+        # mid-round dropouts: their upload never lands, their delta is
+        # zeroed (so ∇^k stays Σ_m ĝ_m), their mirrors revert on scatter
+        comm = comm & active
+
+        def drop(d):
+            m = active.reshape((k,) + (1,) * (d.ndim - 1))
+            return jnp.where(m, d, jnp.zeros((), d.dtype))
+
+        delta = jax.tree_util.tree_map(drop, delta)
+
+    sum_delta = engine_rounds.sum_reduce(comm, delta)
+    nabla_new = lag.tree_add(lag_state["nabla"], sum_delta)
+    new_params, new_opt = server.apply(params, opt_state, nabla_new, step,
+                                       lagcfg)
+    hist_new = lag.hist_push(
+        lag_state["hist"], lag.tree_sqnorm(lag.tree_sub(new_params, params)))
+    comm_i, counters = engine_rounds.comm_counter_updates(lag_state, comm,
+                                                          index=cohort)
+
+    mirrors = population.scatter_state(lag_state, cohort, new_pst,
+                                       active if churny else None)
+    part = active if churny else jnp.ones((k,), bool)
+    age = lag_state["fleet_age"] + 1
+    age = age.at[cohort].set(jnp.where(part, 0, age[cohort]))
+    if "grad_hat" in population.state_keys:
+        innov_m = _innovation(grads, cohort_pst["grad_hat"])
+    else:   # pragma: no cover - no current policy lacks a grad_hat mirror
+        innov_m = jnp.zeros((k,), jnp.float32)
+    innov = lag_state["fleet_innov"].at[cohort].set(
+        jnp.where(part, innov_m, lag_state["fleet_innov"][cohort]))
+
+    new_lag = dict(lag_state, nabla=nabla_new, hist=hist_new, **mirrors,
+                   **counters, fleet_alive=alive, fleet_age=age,
+                   fleet_innov=innov)
+
+    bytes_per_upload = policy.wire_bytes(params)
+    pop_mask = jnp.zeros((population.size,), bool).at[cohort].set(comm)
+    metrics = {
+        "comm_mask": pop_mask,                  # (N,) population-wide
+        "cohort_ids": cohort,                   # (k,) sorted client ids
+        "cohort_comm": comm,                    # (k,) cohort upload mask
+        "cohort_active": part,                  # (k,) survived churn
+        "comm_this_round": jnp.sum(comm_i),
+        "comm_total": new_lag["comm_total"],
+        "wire_bytes_this_round":
+            jnp.sum(comm_i).astype(jnp.float32) * bytes_per_upload,
+        "wire_bytes_total":
+            new_lag["comm_total"].astype(jnp.float32) * bytes_per_upload,
+        "trigger_rhs": lag.trigger_rhs(lag_state["hist"], lagcfg),
+        "trigger_rhs_underflow":
+            lag.rhs_underflow(lag_state["hist"], lagcfg, step),
+        "skipped_round": (~jnp.any(comm)).astype(jnp.int32),
+    }
+    return new_params, new_opt, new_lag, metrics
+
+
+# ---------------------------------------------------------------------------
+# Deep driver (the repro.dist trainer shape: init_state + make_step)
+# ---------------------------------------------------------------------------
+
+def init_fleet_state(key, cfg, tcfg, topology, policy=None,
+                     server=None) -> Dict:
+    """Fresh fleet trainer state: the usual ``{params, lag, step[, opt]}``
+    dict, with the lag group holding the FLAT population arrays instead
+    of per-worker stacked pytrees.  Mirrors start at zero (first contact
+    uploads — the federated reading of the paper's all-upload init) and
+    ``comm_per_worker`` is per-CLIENT, shape (N,)."""
+    from repro.models import model
+    policy = policy if policy is not None else tcfg.comm_policy()
+    server = server if server is not None else tcfg.server_optimizer()
+    params = model.init(key, cfg)
+    pop = Population.for_template(params, policy.state_keys,
+                                  topology.population)
+    lag_state = pop.init_state()
+    lag_state.update(
+        nabla=jax.tree_util.tree_map(jnp.zeros_like, params),
+        hist=lag.hist_init(tcfg.D),
+        comm_total=jnp.zeros((), jnp.int32),
+        comm_per_worker=jnp.zeros((pop.size,), jnp.int32),
+    )
+    state = {"params": params, "lag": lag_state,
+             "step": jnp.zeros((), jnp.int32)}
+    opt0 = server.init(params)
+    if opt0 is not None:
+        state["opt"] = opt0
+    return state
+
+
+def make_fleet_step(cfg, tcfg, topology, policy=None, server=None,
+                    schedule_seed: int = 0):
+    """Build the jit-friendly ``(state, batch) → (state, metrics)`` fleet
+    step.  The batch is split across the k COHORT SLOTS (shard m → the
+    m-th sampled client this round); gradients, triggers and the delta
+    reduction are all cohort-sized.  ``lagcfg`` normalizes by the
+    POPULATION (α = lr/N): the aggregate ∇^k sums all N stale gradients.
+    """
+    from repro.models import model
+    policy = policy if policy is not None else tcfg.comm_policy()
+    server = server if server is not None else tcfg.server_optimizer()
+    make_selection(topology.selection)          # validate the dial early
+    N, k = topology.population, topology.cohort
+    lagcfg = tcfg.lag_config(num_units=N)
+
+    def fleet_step(state: Dict, batch: Dict) -> Tuple[Dict, Dict]:
+        params, lag_state = state["params"], state["lag"]
+        pop = Population.for_template(params, policy.state_keys, N)
+        # per-round keys deterministic in the step counter (checkpoint-
+        # free); the policy key matches the sync trainer's derivation
+        # exactly, the sampling chain is folded off it
+        root = jax.random.fold_in(jax.random.PRNGKey(schedule_seed),
+                                  state["step"])
+        kpol = root if policy.needs_rng else None
+        alive, cohort, active = sample_cohort(
+            topology, lag_state, jax.random.fold_in(root, 1))
+
+        shards = topology.place_batch(batch, k)
+        losses, grads = jax.vmap(
+            lambda b: jax.value_and_grad(
+                lambda p: model.loss_fn(p, cfg, b))(params))(shards)
+        loss = server.composite_loss(jnp.mean(losses), params)
+
+        cohort_pst = pop.gather_state(lag_state, cohort, like=params)
+        grad_at_hat = None
+        if policy.needs_grad_at_hat:
+            # LASG-WK: the cohort's second backward pass at its own θ̂_m
+            grad_at_hat = jax.vmap(
+                lambda th, b: jax.grad(
+                    lambda p: model.loss_fn(p, cfg, b))(th),
+                in_axes=(0, 0))(cohort_pst["theta_hat"], shards)
+        # deep runs have no oracle L_m: the sync trainer's 1/α heuristic
+        L_cohort = jnp.full((k,), 1.0 / tcfg.lr, jnp.float32) \
+            if policy.needs_L_m else None
+
+        new_params, new_opt, new_lag, metrics = fleet_round(
+            policy, server, lagcfg, topology=topology, population=pop,
+            params=params, opt_state=state.get("opt"), lag_state=lag_state,
+            alive=alive, cohort=cohort, active=active,
+            cohort_pst=cohort_pst, grads=grads, step=state["step"],
+            grad_at_hat=grad_at_hat, key=kpol, L_cohort=L_cohort)
+
+        new_state = dict(state, params=new_params, lag=new_lag,
+                         step=state["step"] + 1)
+        if new_opt is not None:
+            new_state["opt"] = new_opt
+        metrics["loss"] = loss
+        return new_state, metrics
+
+    return fleet_step
+
+
+# ---------------------------------------------------------------------------
+# Convex driver (the SimWorkers.run shape, cohort-sampled)
+# ---------------------------------------------------------------------------
+
+def run_convex(problem, policy, server, lagcfg: lag.LAGConfig, topology, *,
+               K: int, seed: int = 0, theta0=None,
+               opt_loss: Optional[float] = None) -> RunReport:
+    """Cohort-sampled convex run over an N-client ``Problem``.
+
+    Initialization is the paper's Alg.-1 line 2 (every client uploads
+    ∇L_m(θ⁰) once — ONE O(N) pass, outside the round loop); each of the
+    K rounds then only gathers/differentiates the cohort's data rows —
+    O(k·n_per·d) compute.  Per-round losses are recorded as the iterate
+    trajectory and evaluated in one vectorized pass AFTER the scan, so
+    the diagnostic never pollutes the O(k) round cost.
+    """
+    from repro.core.convex import _loss
+    N = problem.num_workers
+    if N != topology.population:
+        raise ValueError(
+            f"fleet population ({topology.population}) must equal the "
+            f"problem's client count ({N}) — generate the problem at "
+            f"population size (see repro.fleet.problems.fleet_problem)")
+    k = topology.cohort
+    d = problem.dim
+    theta0 = jnp.zeros((d,), problem.X.dtype) if theta0 is None else theta0
+
+    g0 = problem.worker_grads(theta0)                       # (N, d), once
+    pop = Population.for_template(theta0, policy.state_keys, N)
+    pst0 = policy.init_state(
+        g0, jnp.broadcast_to(theta0, (N, d)) if policy.needs_theta_hat
+        else None)
+    lag_state = pop.init_state()
+    for sk, v in pst0.items():
+        lag_state[MIRROR_PREFIX + sk] = pop.layout.pack_stacked(v)
+    lag_state.update(
+        nabla=jnp.sum(g0, axis=0),
+        hist=lag.hist_init(lagcfg.D),
+        comm_total=jnp.zeros((), jnp.int32),
+        comm_per_worker=jnp.zeros((N,), jnp.int32),
+    )
+    carry0 = dict(
+        theta=theta0,
+        opt=server.init(theta0),
+        lag=lag_state,
+        key=jax.random.PRNGKey(seed),                  # the policy chain
+        skey=jax.random.fold_in(jax.random.PRNGKey(seed), 0x0F1EE7),
+        k=jnp.zeros((), jnp.int32),
+    )
+    kind, lam_w = problem.kind, problem.lam / N
+    Xs, ys, L_m = problem.X, problem.y, problem.L_m
+
+    def step(carry, _):
+        theta = carry["theta"]
+        skey, sround = jax.random.split(carry["skey"])
+        alive, cohort, active = sample_cohort(topology, carry["lag"], sround)
+        Xc, yc = Xs[cohort], ys[cohort]
+        grads = jax.vmap(lambda X, y: jax.grad(
+            lambda t: _loss(kind, X, y, t, lam_w))(theta))(Xc, yc)
+        cohort_pst = pop.gather_state(carry["lag"], cohort, like=theta)
+        gah = None
+        if policy.needs_grad_at_hat:
+            gah = jax.vmap(lambda X, y, t: jax.grad(
+                lambda th: _loss(kind, X, y, th, lam_w))(t))(
+                Xc, yc, cohort_pst["theta_hat"])
+        if policy.needs_rng:
+            key, sub = jax.random.split(carry["key"])
+        else:
+            key, sub = carry["key"], None
+        L_cohort = L_m[cohort] if policy.needs_L_m else None
+        new_theta, new_opt, new_lag, metrics = fleet_round(
+            policy, server, lagcfg, topology=topology, population=pop,
+            params=theta, opt_state=carry["opt"], lag_state=carry["lag"],
+            alive=alive, cohort=cohort, active=active,
+            cohort_pst=cohort_pst, grads=grads, step=carry["k"],
+            grad_at_hat=gah, key=sub, L_cohort=L_cohort)
+        new_carry = dict(theta=new_theta, opt=new_opt, lag=new_lag,
+                         key=key, skey=skey, k=carry["k"] + 1)
+        out = (theta, metrics["comm_mask"], metrics["cohort_ids"],
+               metrics["cohort_comm"], metrics["trigger_rhs_underflow"])
+        return new_carry, out
+
+    _, (thetas, comm_mask, cohorts, ccomm, underflow) = jax.jit(
+        lambda c: jax.lax.scan(step, c, None, length=K))(carry0)
+    # diagnostics AFTER the scan: one sequential sweep of full-population
+    # losses over the recorded iterates (lax.map keeps peak memory at one
+    # round's worth even at N = 1e6); same composite objective the sim
+    # driver reports (prox servers add their regularizer)
+    losses = jax.lax.map(
+        lambda t: server.composite_loss(problem.loss(t), t), thetas)
+    if opt_loss is None:
+        _, opt_loss = problem.optimum()
+    from repro.netsim import hetero as netsim_hetero
+    extras = {
+        "trigger_rhs_underflow_rounds": int(np.asarray(underflow).sum()),
+        "L_m_spread": netsim_hetero.realized_spread(problem.L_m),
+        "hetero_score": netsim_hetero.hetero_score(
+            problem.L_m, alpha=lagcfg.alpha, xi=lagcfg.xi, D=lagcfg.D,
+            num_workers=N),
+        "population": N, "cohort": k,
+        "churn": topology.churn, "selection": topology.selection,
+        "cohort_ids": np.asarray(cohorts),        # (K, k) — fleet pricing
+        "cohort_comm": np.asarray(ccomm),         # (K, k)
+    }
+    return RunReport(
+        algo=policy.name, losses=np.asarray(losses),
+        comm_mask=np.asarray(comm_mask), opt_loss=float(opt_loss),
+        bytes_per_upload=policy.wire_bytes(g0[0]),
+        server=server.name, topology=topology.name, extras=extras)

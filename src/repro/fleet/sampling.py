@@ -1,0 +1,67 @@
+"""Cohort sampling + client churn — the stochastic half of a fleet round.
+
+``gumbel_top_k`` draws k clients without replacement with probability
+proportional to their selection scores, entirely vectorized (one (N,)
+Gumbel perturbation + one top-k; no per-client Python, no rejection
+loop).  The returned cohort is SORTED ascending — a canonical order
+that (a) makes gather/scatter indices deterministic given the draw and
+(b) guarantees the identity cohort ``[0..N-1]`` whenever k = N, which
+is what pins ``fleet:M@M`` to the sync golden trajectories regardless
+of the PRNG key.
+
+``churn_step`` is a two-state Markov process per client: alive clients
+leave with probability ``churn``, departed clients re-join with
+probability ``REJOIN`` — so the stationary alive fraction is
+REJOIN/(churn+REJOIN) and a departed client's mirrors go stale for a
+geometric number of rounds before it can be drawn again.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+#: re-join probability of a departed client per round (the leave side is
+#: the topology's ``churn`` dial); ~4-round expected absence
+REJOIN = 0.25
+
+
+def gumbel_top_k(key: jnp.ndarray, scores: jnp.ndarray,
+                 alive: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Sample k distinct client ids ∝ ``scores`` among ``alive`` clients.
+
+    Gumbel-top-k: ``argtop_k(log scores + Gumbel)`` is an exact sample
+    without replacement from the score distribution.  Dead clients score
+    −inf; if fewer than k clients are alive the draw back-fills with the
+    highest-scoring dead clients (the round's ``active`` mask — computed
+    by the caller from ``alive[cohort]`` — zeroes their contribution, so
+    a thin fleet just runs a short round).  Returns sorted int32 ids.
+    """
+    N = scores.shape[0]
+    if not 1 <= k <= N:
+        raise ValueError(f"cohort size must be in [1, {N}], got {k}")
+    g = jax.random.gumbel(key, (N,), jnp.float32)
+    z = jnp.log(jnp.maximum(scores.astype(jnp.float32), 1e-38)) + g
+    # dead clients sort strictly below every alive one, but stay finite
+    # so top_k still returns k distinct ids when alive < k
+    z = jnp.where(alive, z, z - 1e30)
+    _, ids = jax.lax.top_k(z, k)
+    return jnp.sort(ids.astype(jnp.int32))
+
+
+def churn_step(key: jnp.ndarray, alive: jnp.ndarray,
+               churn: float) -> jnp.ndarray:
+    """One Markov churn transition over the (N,) ``alive`` mask.
+
+    ``churn`` is a Python float fixed at trace time; at exactly 0.0 the
+    transition is the identity and is elided from the trace entirely —
+    that structural guarantee (not just a numerical one) is what keeps
+    the no-churn fleet bit-exact with the sync path.
+    """
+    if churn == 0.0:
+        return alive
+    if not 0.0 <= churn <= 1.0:
+        raise ValueError(f"churn must be in [0, 1], got {churn}")
+    u = jax.random.uniform(key, alive.shape, jnp.float32)
+    leave = u < churn
+    rejoin = u < REJOIN
+    return jnp.where(alive, ~leave, rejoin)

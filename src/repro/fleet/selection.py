@@ -1,0 +1,53 @@
+"""Cohort selection scores: which k of the N clients to poll this round.
+
+The LAG reading (LASG, Chen et al. 2020, arXiv:2002.11360): at fleet
+scale the per-worker trigger threshold (ξ/(α²M²))Σ‖θ movement‖² shrinks
+like 1/N², so almost every polled client fires — the lazy machinery's
+leverage moves from "which uploads to skip" to "which clients to poll".
+The ``innovation`` rule carries the trigger LHS ‖∇L_m(θ̂_m) − ĝ_m‖² of
+each client's LAST participation forward as its selection score: the
+server polls the clients whose gradients were changing fastest when it
+last saw them, aged so quiet clients are still revisited.
+
+Rules return UNNORMALIZED positive scores; the sampler (``sampling.
+gumbel_top_k``) draws the cohort via the Gumbel-top-k trick, so any
+positive rescaling of the scores is equivalent.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax.numpy as jnp
+
+#: ``fleet_age`` rounds add this fraction of the score per round of
+#: absence — bounded-staleness pressure so low-innovation clients are
+#: still re-polled eventually (an aged client's score grows linearly)
+AGE_BOOST = 0.1
+
+
+def uniform_scores(lag_state: Dict) -> jnp.ndarray:
+    """Every alive client equally likely — the FedAvg-style baseline."""
+    return jnp.ones_like(lag_state["fleet_innov"])
+
+
+def innovation_scores(lag_state: Dict) -> jnp.ndarray:
+    """Lazy server-side selection: last measured innovation
+    ‖∇L_m − ĝ_m‖², linearly age-boosted.  Never-polled clients carry
+    ``population.INNOV_INIT`` (huge) so first contact happens before any
+    innovation-ranked revisit."""
+    innov = lag_state["fleet_innov"]
+    age = lag_state["fleet_age"].astype(innov.dtype)
+    return innov * (1.0 + AGE_BOOST * age) + 1e-30
+
+
+SELECTION_RULES: Dict[str, Callable[[Dict], jnp.ndarray]] = {
+    "uniform": uniform_scores,
+    "innovation": innovation_scores,
+}
+
+
+def make_selection(name: str) -> Callable[[Dict], jnp.ndarray]:
+    if name not in SELECTION_RULES:
+        raise ValueError(f"unknown fleet selection rule {name!r}; known: "
+                         f"{tuple(SELECTION_RULES)}")
+    return SELECTION_RULES[name]

@@ -1,0 +1,67 @@
+"""``FleetTopology`` — sampled-cohort rounds over an N-client population.
+
+``fleet:N@k`` (parsed by ``repro.engine.make_topology``): N virtual
+clients, of which a k-cohort is sampled every round.  The lazy units the
+engine round sees are the k COHORT SLOTS — ``units()`` returns k, so
+batch placement, the policy vmap and the delta reduction are all O(k) —
+while the population-side state (policy mirrors, churn/age/innovation
+bookkeeping) lives in flat per-client arrays (``repro.fleet.
+population``) that are the only thing sized by N.
+
+Dials beyond the spec string (constructor-only; ``Experiment`` accepts
+topology objects):
+
+  ``churn``      per-round leave probability of the two-state Markov
+                 churn process (``sampling.churn_step``); 0.0 (default)
+                 is structurally churn-free — required for the golden
+                 ``fleet:M@M`` ≡ sync equivalence
+  ``selection``  cohort scoring rule (``selection.SELECTION_RULES``):
+                 "uniform" (default) or "innovation" — the lazy
+                 server-side client selection of the LASG reading
+
+The α in the trigger/step stays the paper's 1/(population) scaling
+(``LAGConfig.num_workers = N``): the server's aggregate ∇^k sums ALL N
+clients' stale gradients, not just the cohort's, so the stepsize must
+normalize by N — at k = N this degenerates to exactly the sync trainer.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.engine.topology import Topology
+from repro.fleet.selection import SELECTION_RULES
+
+
+class FleetTopology(Topology):
+    name = "fleet"
+    kind = "deep"            # deep driver native; convex via fleet.run_convex
+
+    def __init__(self, population: int, cohort: int, mesh=None,
+                 churn: float = 0.0, selection: str = "uniform",
+                 num_units: Optional[int] = None):
+        if population < 1:
+            raise ValueError(f"fleet population must be >= 1, got "
+                             f"{population}")
+        if not 1 <= cohort <= population:
+            raise ValueError(f"fleet cohort must be in [1, population="
+                             f"{population}], got {cohort}")
+        if not 0.0 <= churn <= 1.0:
+            raise ValueError(f"fleet churn must be in [0, 1], got {churn}")
+        if selection not in SELECTION_RULES:
+            raise ValueError(f"unknown fleet selection rule {selection!r}; "
+                             f"known: {tuple(SELECTION_RULES)}")
+        # the engine's unit count is the cohort: that is what batches are
+        # split into and what the policy vmaps over
+        super().__init__(num_units=int(cohort), mesh=mesh)
+        self.population = int(population)
+        self.cohort = int(cohort)
+        self.churn = float(churn)
+        self.selection = selection
+
+    def units(self, default: int) -> int:
+        return self.cohort
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"FleetTopology(population={self.population}, "
+                f"cohort={self.cohort}, churn={self.churn}, "
+                f"selection={self.selection!r})")

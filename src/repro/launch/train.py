@@ -10,6 +10,13 @@ Logs loss + LAG communication counters; checkpoints include LAG state.
 (``repro.netsim.hetero``), ``--cluster`` prices the run's upload mask
 through the event-driven network cost model (``repro.netsim.cluster``)
 and prints simulated wall-clock vs the GD baseline at exit.
+
+``--topology`` selects the placement backend (``repro.engine.topology``
+specs): ``pods:2``, ``async:4@2``, or the sampled-cohort federated
+fleet ``fleet:100000@64`` (``repro.fleet`` — per-round k-client cohorts
+from an N-client population; ``--fleet-churn`` / ``--fleet-selection``
+dial dropout and lazy server-side client selection, and ``--cluster``
+prices the cohort uploads per-client via ``price_cohort_mask``).
 """
 from __future__ import annotations
 
@@ -40,6 +47,19 @@ def build_argparser():
     p.add_argument("--server", default=None,
                    help="repro.engine server-optimizer spec overriding the "
                         "algo default (e.g. 'prox-l1@1e-4', 'momentum@0.9')")
+    p.add_argument("--topology", default=None,
+                   help="repro.engine topology spec (e.g. 'shards', "
+                        "'pods:2', 'async:4@2', 'fleet:100000@64'); "
+                        "default: flat batch shards.  fleet:N@k samples a "
+                        "k-client cohort per round from N virtual clients")
+    p.add_argument("--fleet-churn", type=float, default=0.0,
+                   help="fleet only: per-round client leave probability "
+                        "(clients re-join with stale state)")
+    p.add_argument("--fleet-selection", default="uniform",
+                   choices=["uniform", "innovation"],
+                   help="fleet only: cohort selection rule — 'innovation' "
+                        "is the lazy (LAG-trigger-ranked) server-side "
+                        "client selection")
     p.add_argument("--steps", type=int, default=100)
     p.add_argument("--batch", type=int, default=32)
     p.add_argument("--seq", type=int, default=256)
@@ -85,17 +105,40 @@ def main(argv=None):
     if args.hetero is not None and cfg.family in ("audio", "vlm"):
         raise SystemExit(f"--hetero shards are LM-only (token-noise ramp); "
                          f"--arch {args.arch} is family {cfg.family!r}")
+
+    topo = None
+    if args.topology is not None:
+        from repro.engine import make_topology
+        topo = make_topology(args.topology, mesh=mesh)
+    fleet = getattr(topo, "name", None) == "fleet"
+    if fleet and (args.fleet_churn or args.fleet_selection != "uniform"):
+        from repro.fleet import FleetTopology
+        topo = FleetTopology(population=topo.population, cohort=topo.cohort,
+                             mesh=mesh, churn=args.fleet_churn,
+                             selection=args.fleet_selection)
+    # W = lazy-unit count the batch is split over: the cohort size for
+    # fleet, the topology's unit count otherwise (--workers by default).
+    W = topo.units(args.workers) if topo is not None else args.workers
     if args.cluster is not None:
         from repro.netsim import make_cluster
-        make_cluster(args.cluster, num_workers=args.workers)  # validate early
+        # fleet runs price per-CLIENT links, so the cluster is
+        # population-sized; everything else prices per-worker
+        make_cluster(args.cluster,
+                     num_workers=topo.population if fleet else W)
 
-    state = init_state(jax.random.PRNGKey(args.seed), cfg, tcfg)
+    if fleet:
+        from repro import fleet as fleet_lib
+        state = fleet_lib.init_fleet_state(
+            jax.random.PRNGKey(args.seed), cfg, tcfg, topo)
+        train_step = fleet_lib.make_fleet_step(cfg, tcfg, topo)
+    else:
+        state = init_state(jax.random.PRNGKey(args.seed), cfg, tcfg,
+                           topology=topo)
+        train_step = make_train_step(cfg, tcfg, topology=topo)
     start = 0
     if args.resume and args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
         state, start = restore(args.ckpt_dir, state)
         print(f"resumed from step {start}")
-
-    train_step = make_train_step(cfg, tcfg)
     with mesh_context(mesh):
         state_sh = tree_shardings(state, mesh)
         state = jax.device_put(state, state_sh)
@@ -104,18 +147,24 @@ def main(argv=None):
         stream = TokenStream(vocab=cfg.vocab_size, seed=args.seed)
         log = metrics_lib.Logger(args.log)
         t0 = time.time()
-        masks = []
+        masks, cohorts, cohort_comm = [], [], []
         for step in range(start, args.steps):
             if args.hetero is not None:
                 batch = make_heterogeneous_inputs(
-                    cfg, stream, step, args.workers, args.batch, args.seq,
+                    cfg, stream, step, W, args.batch, args.seq,
                     fixed=False, h=args.hetero)
             else:
                 batch = make_inputs(cfg, stream, step, args.batch, args.seq)
             batch = jax.device_put(batch, batch_shardings(batch, mesh))
             state, m = step_fn(state, batch)
             if args.cluster is not None:
-                masks.append(np.asarray(jax.device_get(m["comm_mask"])))
+                if fleet:
+                    cohorts.append(
+                        np.asarray(jax.device_get(m["cohort_ids"])))
+                    cohort_comm.append(
+                        np.asarray(jax.device_get(m["cohort_comm"])))
+                else:
+                    masks.append(np.asarray(jax.device_get(m["comm_mask"])))
             if step % 10 == 0 or step == args.steps - 1:
                 log.log(step, loss=m["loss"],
                         comm_round=m["comm_this_round"],
@@ -124,23 +173,34 @@ def main(argv=None):
                     and (step + 1) % args.ckpt_every == 0:
                 save(args.ckpt_dir, step + 1, state)
         dt = time.time() - t0
-        W = tcfg.num_workers
         total = int(jax.device_get(state["lag"]["comm_total"]))
         rounds = args.steps - start
+        # GD baseline: every unit uploads every round — for fleet that is
+        # the whole COHORT (the round only ever polls k of N clients)
         print(f"done: {rounds} rounds in {dt:.1f}s | uploads {total} "
               f"vs GD {rounds * W} "
               f"({100.0 * total / max(rounds * W, 1):.1f}% of GD)")
-        if args.cluster is not None and masks:
-            from repro.netsim import make_cluster, price_mask
-            cl = make_cluster(args.cluster, num_workers=W)
+        if args.cluster is not None and (masks or cohorts):
+            from repro.netsim import (make_cluster, price_cohort_mask,
+                                      price_mask)
             bpu = tcfg.comm_policy().wire_bytes(state["params"])
             dense = float(sum(
                 l.size * jnp.dtype(l.dtype).itemsize
                 for l in jax.tree_util.tree_leaves(state["params"])))
-            t_run = price_mask(np.stack(masks), bpu, cl,
-                               dense_bytes=dense).sum()
-            t_gd = price_mask(np.ones((rounds, W), bool), dense, cl,
-                              dense_bytes=dense).sum()
+            if fleet:
+                cl = make_cluster(args.cluster, num_workers=topo.population)
+                ids = np.stack(cohorts)
+                cm = np.stack(cohort_comm).astype(bool)
+                t_run = price_cohort_mask(ids, cm, bpu, cl,
+                                          dense_bytes=dense).sum()
+                t_gd = price_cohort_mask(ids, np.ones_like(cm), dense, cl,
+                                         dense_bytes=dense).sum()
+            else:
+                cl = make_cluster(args.cluster, num_workers=W)
+                t_run = price_mask(np.stack(masks), bpu, cl,
+                                   dense_bytes=dense).sum()
+                t_gd = price_mask(np.ones((rounds, W), bool), dense, cl,
+                                  dense_bytes=dense).sum()
             print(f"simulated wall-clock on '{args.cluster}': "
                   f"{t_run:.2f}s vs GD {t_gd:.2f}s "
                   f"({t_gd / max(t_run, 1e-12):.2f}x advantage)")

@@ -33,6 +33,7 @@ reproduces the paper's savings-grow-with-heterogeneity trend is
 walkthrough is docs/ARCHITECTURE.md.
 """
 from repro.netsim.cluster import (CLUSTERS, Cluster, Link, make_cluster,
+                                  price_cohort_mask, price_fleet_report,
                                   price_mask, price_report)
 from repro.netsim.hetero import (hetero_L_targets, hetero_inputs,
                                  hetero_problem, hetero_score,
@@ -40,7 +41,7 @@ from repro.netsim.hetero import (hetero_L_targets, hetero_inputs,
 
 __all__ = [
     "Cluster", "Link", "CLUSTERS", "make_cluster", "price_mask",
-    "price_report",
+    "price_report", "price_cohort_mask", "price_fleet_report",
     "hetero_problem", "hetero_L_targets", "hetero_inputs", "hetero_score",
     "realized_spread", "shard_noise_levels",
 ]

@@ -154,11 +154,26 @@ def _straggler(M, lat, bw):
     return (lats, bws, STRAGGLER_SIGMA)
 
 
+#: "fleet" profile: lognormal per-client link draws (σ below) + compute
+#: jitter — consumer uplinks are heavy-tailed, not a tidy geometric ramp
+FLEET_LINK_SIGMA = 0.75
+
+
+def _fleet(M, lat, bw):
+    # deterministic draw (fixed stream id): the same N-client fleet spec
+    # always prices identically; the base lat/bw are the MEDIAN link
+    rng = np.random.default_rng(np.random.SeedSequence([0xF1EE7]))
+    lats = lat * rng.lognormal(0.0, FLEET_LINK_SIGMA, M)
+    bws = bw * rng.lognormal(0.0, FLEET_LINK_SIGMA, M)
+    return (lats, bws, STRAGGLER_SIGMA)
+
+
 #: profile name → (M, base latency, base bw) → (latencies, bws, sigma)
 CLUSTERS = {
     "uniform": _uniform,
     "hetero": _hetero,
     "straggler": _straggler,
+    "fleet": _fleet,
 }
 
 
@@ -267,6 +282,86 @@ def price_mask(comm_mask, bytes_per_upload: float, cluster: Cluster,
     bcast = cluster.bcast.transfer_seconds(
         bytes_per_upload if dense_bytes is None else dense_bytes)
     return ready + bcast
+
+
+def price_cohort_mask(cohort_ids, cohort_mask, bytes_per_upload: float,
+                      cluster: Cluster,
+                      dense_bytes: Optional[float] = None) -> np.ndarray:
+    """(K, k) sampled cohorts + upload mask → (K,) seconds per round.
+
+    The fleet pricer: identical event model to :func:`price_mask` (skip
+    decisions gate the barrier for free, payloads serialize on the
+    ingress NIC in arrival order), but the per-round link arrays are
+    GATHERED at the k sampled client ids — everything is (K, k), so a
+    10⁶-client population prices at the cost of its cohorts, never
+    O(K·N).  On the full-population identity cohort it reduces exactly
+    to :func:`price_mask` (pinned by tests/test_netsim.py).  Compute
+    jitter is lognormal per (cluster.seed, round, slot) — deterministic
+    per seed, like the dense path.
+    """
+    ids = np.asarray(cohort_ids, np.int64)
+    mask = np.asarray(cohort_mask, bool)
+    if ids.ndim != 2 or mask.shape != ids.shape:
+        raise ValueError(f"cohort_ids/cohort_mask must both be (rounds, "
+                         f"cohort), got {ids.shape} and {mask.shape}")
+    if ids.size and not (0 <= ids.min() and ids.max()
+                         < cluster.num_workers):
+        raise ValueError(f"cohort ids in [{ids.min()}, {ids.max()}] exceed "
+                         f"cluster {cluster.name!r}'s "
+                         f"{cluster.num_workers} clients")
+    K, k = ids.shape
+    if cluster.straggler_sigma:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([cluster.seed, 1]))
+        jitter = rng.lognormal(0.0, cluster.straggler_sigma, size=(K, k))
+    else:
+        jitter = np.ones((K, k))
+    finish = cluster.compute_s[ids] * jitter
+    arrive = finish + cluster.up_latency_s[ids]                 # (K, k)
+    rate = np.minimum(cluster.up_bw_Bps[ids], cluster.server_bw_Bps)
+    xfer = float(bytes_per_upload) / rate                       # (K, k)
+
+    order = np.argsort(arrive, axis=1, kind="stable")
+    rows = np.arange(K)
+    busy = np.zeros(K)
+    ready = np.zeros(K)
+    for j in range(k):
+        s = order[:, j]
+        a = arrive[rows, s]
+        up = mask[rows, s]
+        start = np.maximum(busy, a)
+        done = start + xfer[rows, s]
+        busy = np.where(up, done, busy)
+        ready = np.maximum(ready, np.where(up, done, a))
+    bcast = cluster.bcast.transfer_seconds(
+        bytes_per_upload if dense_bytes is None else dense_bytes)
+    return ready + bcast
+
+
+def price_fleet_report(report, cluster,
+                       dense_bytes: Optional[float] = None):
+    """Price a fleet ``RunReport`` in place (and return it).
+
+    Reads the per-round cohorts the fleet drivers record in
+    ``report.extras`` (``cohort_ids``/``cohort_comm``) and fills
+    ``round_seconds`` via :func:`price_cohort_mask`; the cluster is
+    sized to the POPULATION (``report.comm_mask.shape[1]``), the pricing
+    work to the cohorts.
+    """
+    extras = report.extras
+    if "cohort_ids" not in extras or "cohort_comm" not in extras:
+        raise ValueError(
+            "price_fleet_report needs extras['cohort_ids'] / "
+            "extras['cohort_comm'] — the per-round cohorts a fleet run "
+            "records; for dense (every-unit) masks use price_report")
+    N = int(np.asarray(report.comm_mask).shape[1])
+    cl = make_cluster(cluster, num_workers=N)
+    report.round_seconds = price_cohort_mask(
+        extras["cohort_ids"], extras["cohort_comm"],
+        report.bytes_per_upload, cl, dense_bytes=dense_bytes)
+    report.extras["cluster"] = cl.name
+    report.extras["wall_seconds"] = float(report.round_seconds.sum())
+    return report
 
 
 def price_report(report, cluster, dense_bytes: Optional[float] = None,

@@ -108,6 +108,55 @@ def test_layout_roundtrip_stacked_and_empty_tree():
     assert lo.flatten_stacked(empty).shape == (3, 0, fastpath.LANES)
 
 
+@pytest.mark.parametrize("W", [0, 1, 5])
+def test_layout_stacked_roundtrip_leading_dims(W):
+    """flatten_stacked/unflatten_stacked round-trip any leading dim —
+    including the ZERO-size one (an empty cohort) — with zero-size
+    leaves mixed in.  Twin of the hypothesis property below."""
+    sizes = (3, 0, fastpath.LANES + 1)
+    tree = make_tree(sizes, W=W, dtype=jnp.bfloat16, seed=11)
+    lo = FlatLayout.for_tree(worker_slice(tree, 0) if W else
+                             make_tree(sizes))
+    buf = lo.flatten_stacked(tree)
+    assert buf.shape == (W, lo.rows, fastpath.LANES)
+    back = lo.unflatten_stacked(buf, like=tree)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(back)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+@pytest.mark.parametrize("W", [0, 1, 4])
+def test_layout_packed_roundtrip_and_cols(W):
+    """The compact per-client view (the fleet population substrate):
+    pack_stacked/unpack_stacked round-trips exactly, its row is per-leaf
+    LANES-padded only (strictly smaller than the grid-padded row for
+    ragged trees), and zero-lane leaves scatter back as zeros."""
+    sizes = (1, 0, fastpath.LANES - 1, 300)
+    tree = make_tree(sizes, W=W, seed=12)
+    lo = FlatLayout.for_tree(worker_slice(tree, 0) if W else
+                             make_tree(sizes))
+    assert lo.packed_cols == sum(-(-s // fastpath.LANES) * fastpath.LANES
+                                 for s in sizes)
+    assert lo.packed_cols < lo.rows * fastpath.LANES    # no grid tail
+    packed = lo.pack_stacked(tree)
+    assert packed.shape == (W, lo.packed_cols)
+    back = lo.unpack_stacked(packed, like=tree)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(back)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # an all-empty template packs to (W, 0) and unpacks to zeros
+    empty = {"e": jnp.zeros((W, 0))}
+    le = FlatLayout.for_tree({"e": jnp.zeros((0,))})
+    assert le.packed_cols == 0
+    assert le.pack_stacked(empty).shape == (W, 0)
+    assert le.unpack_stacked(le.pack_stacked(empty))["e"].shape == (W, 0)
+    with pytest.raises(ValueError, match="leaves"):
+        lo.pack_stacked({"only": jnp.zeros((W, 3))})
+
+
 def test_layout_pad_region_is_zero():
     tree = {"x": jnp.ones((7,))}
     lo = FlatLayout.for_tree(tree)
@@ -437,6 +486,30 @@ if HAVE_HYPOTHESIS:
                                            rtol=1e-5, atol=1e-6)
             np.testing.assert_allclose(float(lhs[m]), tot,
                                        rtol=1e-4, atol=1e-6)
+
+    lead_dims = st.integers(0, 6)          # leading dims INCLUDING zero
+
+    @given(leaf_sizes, dtypes, lead_dims, st.integers(0, 1000))
+    def test_property_stacked_roundtrip(sizes, dtype, W, seed):
+        tree = make_tree(tuple(sizes), W=W, dtype=dtype, seed=seed)
+        lo = FlatLayout.for_tree(make_tree(tuple(sizes), dtype=dtype))
+        back = lo.unflatten_stacked(lo.flatten_stacked(tree), like=tree)
+        for a, b in zip(jax.tree_util.tree_leaves(tree),
+                        jax.tree_util.tree_leaves(back)):
+            assert a.shape == b.shape and a.dtype == b.dtype
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+    @given(leaf_sizes, lead_dims, st.integers(0, 1000))
+    def test_property_packed_roundtrip(sizes, W, seed):
+        tree = make_tree(tuple(sizes), W=W, seed=seed)
+        lo = FlatLayout.for_tree(make_tree(tuple(sizes)))
+        packed = lo.pack_stacked(tree)
+        assert packed.shape == (W, lo.packed_cols)
+        back = lo.unpack_stacked(packed, like=tree)
+        for a, b in zip(jax.tree_util.tree_leaves(tree),
+                        jax.tree_util.tree_leaves(back)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
     @given(leaf_sizes, dtypes, workers, st.integers(0, 1000))
     def test_property_masked_select_exact(sizes, dtype, W, seed):

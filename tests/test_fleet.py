@@ -1,0 +1,332 @@
+"""repro.fleet: sampled-cohort federated rounds over million-client
+populations — the flat packed population substrate, Gumbel-top-k cohort
+sampling with churn and lazy (innovation-ranked) server-side selection,
+the identity-cohort golden pinning against tests/golden/, the convex
+fleet≡sim equivalence, and the O(K·k) cohort pricer's reduction to the
+dense ``price_mask``."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import fastpath, fleet
+from repro.engine import Experiment
+from repro.engine.topology import make_topology
+from repro.fleet import sampling, selection
+from repro.fleet.population import INNOV_INIT, MIRROR_PREFIX, Population
+from repro.fleet.topology import FleetTopology
+from repro.netsim import cluster as ncluster
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "lag_wk_50step.json")
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    from repro.configs import get_config
+    return get_config("llama3.2-1b", num_layers=1, d_model=16, num_heads=2,
+                      num_kv_heads=1, head_dim=8, d_ff=32, vocab_size=64)
+
+
+# ---------------------------------------------------------------------------
+# Spec parsing + topology validation
+# ---------------------------------------------------------------------------
+
+def test_fleet_spec_parsing_and_validation():
+    t = make_topology("fleet:100000@64")
+    assert isinstance(t, FleetTopology)
+    assert t.population == 100000 and t.cohort == 64
+    assert t.units(8) == 64                     # cohort wins over --workers
+    assert t.name == "fleet" and t.kind == "deep"
+    assert make_topology("fleet:4@4").cohort == 4
+    with pytest.raises(ValueError, match="churn"):
+        FleetTopology(population=10, cohort=2, churn=1.5)
+    with pytest.raises(ValueError, match="selection"):
+        FleetTopology(population=10, cohort=2, selection="roulette")
+    with pytest.raises(ValueError, match="cohort"):
+        FleetTopology(population=10, cohort=11)
+    with pytest.raises(ValueError, match="population"):
+        FleetTopology(population=0, cohort=1)
+
+
+# ---------------------------------------------------------------------------
+# Sampling: Gumbel-top-k, churn, the lazy selection rules
+# ---------------------------------------------------------------------------
+
+def test_gumbel_top_k_sorted_in_range_and_identity_at_full():
+    key = jax.random.PRNGKey(0)
+    N = 12
+    alive = jnp.ones((N,), bool)
+    scores = jnp.ones((N,))
+    # k = N ⇒ the identity cohort regardless of the key (sorted output)
+    np.testing.assert_array_equal(
+        np.asarray(sampling.gumbel_top_k(key, scores, alive, N)),
+        np.arange(N))
+    ids = np.asarray(sampling.gumbel_top_k(key, scores, alive, 5))
+    assert ids.shape == (5,) and len(set(ids.tolist())) == 5
+    assert (np.diff(ids) > 0).all() and 0 <= ids.min() and ids.max() < N
+    # dead clients are never drawn while enough live ones exist
+    alive = jnp.arange(N) < 6
+    for s in range(8):
+        ids = np.asarray(sampling.gumbel_top_k(
+            jax.random.PRNGKey(s), scores, alive, 4))
+        assert ids.max() < 6
+    with pytest.raises(ValueError, match="cohort"):
+        sampling.gumbel_top_k(key, scores, alive, 0)
+    with pytest.raises(ValueError, match="cohort"):
+        sampling.gumbel_top_k(key, scores, alive, N + 1)
+
+
+def test_churn_step_structural_identity_and_markov_moves():
+    key = jax.random.PRNGKey(3)
+    alive = jnp.asarray([True] * 50 + [False] * 14)
+    # churn 0.0 is a Python-level identity: no trace, the SAME array
+    assert sampling.churn_step(key, alive, 0.0) is alive
+    # churn 1.0: every live client leaves; dead ones re-join w.p. REJOIN
+    gone = np.asarray(sampling.churn_step(key, alive, 1.0))
+    assert not gone[:50].any()
+    # a mid dial moves SOME clients both ways (statistically certain)
+    moved = np.asarray(sampling.churn_step(key, alive, 0.5)) \
+        != np.asarray(alive)
+    assert moved.any()
+    with pytest.raises(ValueError, match="churn"):
+        sampling.churn_step(key, alive, -0.1)
+
+
+def test_innovation_selection_prefers_stale_and_never_polled():
+    N = 10
+    lag_state = {
+        "fleet_alive": jnp.ones((N,), bool),
+        "fleet_age": jnp.zeros((N,), jnp.int32),
+        # clients 0-6 measured tiny innovation; 7-9 never polled
+        "fleet_innov": jnp.asarray([1e-3] * 7 + [INNOV_INIT] * 3),
+    }
+    scores = selection.make_selection("innovation")(lag_state)
+    assert float(scores[7]) > float(scores[0])
+    # the INNOV_INIT gap (~1e33 ×) dwarfs Gumbel noise: never-polled
+    # clients are ALWAYS drafted before measured-quiet ones
+    for s in range(8):
+        ids = set(np.asarray(sampling.gumbel_top_k(
+            jax.random.PRNGKey(s), scores,
+            lag_state["fleet_alive"], 3)).tolist())
+        assert ids == {7, 8, 9}
+    # age boost: an old quiet client outscores a fresh identical one
+    aged = dict(lag_state, fleet_age=jnp.asarray([100] + [0] * (N - 1),
+                                                 jnp.int32))
+    s_aged = selection.make_selection("innovation")(aged)
+    assert float(s_aged[0]) > float(s_aged[1])
+    # uniform ignores the bookkeeping entirely
+    uni = selection.make_selection("uniform")(lag_state)
+    assert np.unique(np.asarray(uni)).size == 1
+    with pytest.raises(ValueError, match="selection"):
+        selection.make_selection("roulette")
+
+
+# ---------------------------------------------------------------------------
+# The packed population substrate
+# ---------------------------------------------------------------------------
+
+def test_population_gather_scatter_roundtrip_with_dropout_revert():
+    template = {"w": jnp.zeros((3, 5), jnp.bfloat16),
+                "b": jnp.zeros((7,), jnp.float32),
+                "e": jnp.zeros((0,), jnp.float32)}
+    pop = Population.for_template(template, ("grad_hat",), size=9)
+    st = pop.init_state()
+    assert st[MIRROR_PREFIX + "grad_hat"].shape \
+        == (9, pop.layout.packed_cols)
+    cohort = jnp.asarray([1, 4, 8])
+    stacked = {"w": jax.random.normal(jax.random.PRNGKey(0), (3, 3, 5)
+                                      ).astype(jnp.bfloat16),
+               "b": jax.random.normal(jax.random.PRNGKey(1), (3, 7)),
+               "e": jnp.zeros((3, 0))}
+    st.update(pop.scatter_state(st, cohort, {"grad_hat": stacked}))
+    back = pop.gather_state(st, cohort, like=template)["grad_hat"]
+    for k in stacked:
+        assert back[k].dtype == template[k].dtype
+        np.testing.assert_array_equal(
+            np.asarray(back[k], np.float32),
+            np.asarray(stacked[k], np.float32))
+    # inactive rows revert EXACTLY (the mid-round-dropout contract)
+    bumped = jax.tree_util.tree_map(lambda x: x + 1, stacked)
+    active = jnp.asarray([True, False, True])
+    st2 = dict(st, **pop.scatter_state(st, cohort, {"grad_hat": bumped},
+                                       active))
+    after = pop.gather_state(st2, cohort, like=template)["grad_hat"]
+    np.testing.assert_array_equal(np.asarray(after["b"][1]),
+                                  np.asarray(stacked["b"][1]))
+    np.testing.assert_array_equal(np.asarray(after["b"][0]),
+                                  np.asarray(bumped["b"][0]))
+
+
+def test_fleet_memory_sublinear_in_population(tiny_model):
+    """Acceptance criterion: the ONLY per-client state is the compact
+    (N, packed_cols) mirrors + (N,) bookkeeping — no kernel-grid-padded
+    or pytree-copied axes scale with N."""
+    from repro.dist import TrainerConfig
+    N = 512
+    topo = make_topology(f"fleet:{N}@8")
+    tcfg = TrainerConfig(algo="lag-wk", num_workers=8)
+    state = fleet.init_fleet_state(jax.random.PRNGKey(0), tiny_model,
+                                   tcfg, topo)
+    params = state["params"]
+    pop = Population.for_template(params, ("grad_hat",), N)
+    # the compact packed row is strictly smaller than the kernel-grid
+    # row the fastpath plane would allocate (BLOCK-padded tail)
+    assert pop.layout.packed_cols < pop.layout.rows * fastpath.LANES
+    psize = sum(l.size for l in jax.tree_util.tree_leaves(params))
+    for key, arr in state["lag"].items():
+        for leaf in jax.tree_util.tree_leaves(arr):
+            if leaf.ndim and leaf.shape[0] == N:
+                # N-dim arrays: 1-D bookkeeping or 2-D packed mirrors
+                assert leaf.ndim <= 2, key
+                if leaf.ndim == 2:
+                    assert key.startswith(MIRROR_PREFIX), key
+                    assert leaf.shape[1] == pop.layout.packed_cols
+            else:
+                # everything else is O(params) or O(D), never O(N)
+                assert leaf.size <= max(psize, 64), key
+
+
+# ---------------------------------------------------------------------------
+# The identity-cohort degeneration: fleet:M@M ≡ the sync trainers
+# ---------------------------------------------------------------------------
+
+def test_fleet_full_cohort_reproduces_sync_golden():
+    """Acceptance criterion: fleet:4@4 (no churn, uniform selection)
+    through the Experiment front door reproduces the sync lag-wk
+    golden's EXACT upload decisions — the cohort is the identity
+    permutation and every round degenerates to the sync round."""
+    gold = json.load(open(GOLDEN))
+    r = Experiment(model="llama3.2-1b", algo="lag-wk", steps=50,
+                   workers=4, lr=0.05, batch=8, seq=64,
+                   topology="fleet:4@4").run()
+    assert r.comms_per_iter.tolist() == gold["comm_this_round"]
+    assert r.uploads_per_worker.tolist() == gold["comm_per_worker"]
+    assert r.total_comms == gold["comm_total"]
+    np.testing.assert_allclose(r.losses, gold["losses"], rtol=1e-4)
+    assert r.topology == "fleet"
+    assert r.extras["cohort_ids"].shape == (50, 4)
+
+
+def test_convex_fleet_identity_matches_sim():
+    prob = fleet.fleet_problem("linreg", num_clients=6, n_per=8, d=5,
+                               seed=2)
+    sim = Experiment(problem=prob, algo="lag-wk", steps=40,
+                     opt_loss=0.0).run()
+    flt = Experiment(problem=prob, algo="lag-wk", steps=40,
+                     opt_loss=0.0, topology="fleet:6@6").run()
+    np.testing.assert_array_equal(np.asarray(sim.comm_mask),
+                                  np.asarray(flt.comm_mask))
+    # same iterates; the fleet driver evaluates losses in a separately
+    # compiled post-scan sweep, so the last f32 ulp may reassociate
+    np.testing.assert_allclose(sim.losses, flt.losses, rtol=1e-5)
+    np.testing.assert_array_equal(
+        np.asarray(flt.extras["cohort_ids"]),
+        np.tile(np.arange(6), (40, 1)))
+
+
+def test_convex_fleet_population_mismatch_is_actionable():
+    prob = fleet.fleet_problem("linreg", num_clients=6, n_per=4, d=3)
+    with pytest.raises(ValueError, match="fleet_problem"):
+        Experiment(problem=prob, algo="lag-wk", steps=2, opt_loss=0.0,
+                   topology="fleet:9@3").run()
+
+
+# ---------------------------------------------------------------------------
+# Sampled cohorts: O(k) rounds, churn + selection dials, pricing
+# ---------------------------------------------------------------------------
+
+def test_convex_fleet_sampled_run_with_cohort_pricing():
+    N, k, K = 200, 8, 25
+    prob = fleet.fleet_problem("linreg", num_clients=N, n_per=2, d=4,
+                               seed=1)
+    r = Experiment(problem=prob, algo="lag-wk", steps=K, opt_loss=0.0,
+                   topology=f"fleet:{N}@{k}",
+                   cluster=f"fleet:{N}@50ms/20Mbps").run()
+    assert r.comm_mask.shape == (K, N)
+    assert r.extras["cohort_ids"].shape == (K, k)
+    assert (r.comms_per_iter <= k).all()        # never more than a cohort
+    assert np.isfinite(r.losses).all()
+    assert r.extras["population"] == N and r.extras["cohort"] == k
+    assert r.wall_seconds > 0 and r.round_seconds.shape == (K,)
+    assert r.extras["cluster"] == "fleet"
+
+
+def test_fleet_churn_and_selection_dials_run_finite(tiny_model):
+    base = dict(model=tiny_model, algo="lag-wk", steps=6, batch=8,
+                seq=16)
+    topo = FleetTopology(population=32, cohort=8, churn=0.3,
+                         selection="innovation")
+    r = Experiment(topology=topo, **base).run()
+    assert np.isfinite(r.losses).all()
+    assert r.comm_mask.shape == (6, 32)
+    assert (r.comms_per_iter <= 8).all()
+    # the innovation rule with fresh mirrors sweeps never-polled clients
+    # first: the first rounds' cohorts are disjoint until N is covered
+    ids = r.extras["cohort_ids"]
+    assert len(set(ids[:2].ravel().tolist())) == 16
+
+
+# ---------------------------------------------------------------------------
+# The cohort pricer
+# ---------------------------------------------------------------------------
+
+def test_price_cohort_mask_identity_reduces_to_price_mask():
+    """On the full-population identity cohort the O(K·k) fleet pricer is
+    EXACTLY the dense pricer (a jitter-free profile: the two paths draw
+    their straggler streams from different SeedSequence lanes)."""
+    cl = ncluster.make_cluster("hetero:6@2ms/1MBps")
+    rng = np.random.default_rng(0)
+    mask = rng.random((12, 6)) < 0.4
+    ids = np.tile(np.arange(6), (12, 1))
+    np.testing.assert_array_equal(
+        ncluster.price_cohort_mask(ids, mask, 400.0, cl, dense_bytes=800.0),
+        ncluster.price_mask(mask, 400.0, cl, dense_bytes=800.0))
+
+
+def test_price_cohort_mask_deterministic_and_validated():
+    cl = ncluster.make_cluster("fleet:1000@50ms/20Mbps")
+    rng = np.random.default_rng(1)
+    ids = np.sort(rng.choice(1000, size=(9, 16), replace=False, axis=None
+                             ).reshape(9, 16), axis=1)
+    mask = rng.random((9, 16)) < 0.5
+    a = ncluster.price_cohort_mask(ids, mask, 4e4, cl)
+    b = ncluster.price_cohort_mask(ids, mask, 4e4, cl)
+    np.testing.assert_array_equal(a, b)         # per-seed deterministic
+    assert (a > 0).all()
+    with pytest.raises(ValueError, match="cohort_ids/cohort_mask"):
+        ncluster.price_cohort_mask(ids[0], mask[0], 4e4, cl)
+    with pytest.raises(ValueError, match="exceed"):
+        ncluster.price_cohort_mask(ids + 1000, mask, 4e4, cl)
+    with pytest.raises(ValueError, match="price_report"):
+        from repro.engine.report import RunReport
+        r = RunReport(algo="gd", losses=np.zeros(2),
+                      comm_mask=np.zeros((2, 3), bool), opt_loss=0.0,
+                      bytes_per_upload=4.0)
+        ncluster.price_fleet_report(r, cl)
+
+
+def test_fleet_cluster_profile_heavy_tailed_and_deterministic():
+    a = ncluster.make_cluster("fleet:5000@50ms/20Mbps")
+    b = ncluster.make_cluster("fleet:5000@50ms/20Mbps")
+    np.testing.assert_array_equal(a.up_latency_s, b.up_latency_s)
+    assert a.straggler_sigma > 0
+    # lognormal links spread around the spec'd median
+    assert a.up_latency_s.min() < 50e-3 < a.up_latency_s.max()
+    assert np.median(a.up_latency_s) == pytest.approx(50e-3, rel=0.1)
+
+
+# ---------------------------------------------------------------------------
+# Package surface (README/ARCHITECTURE promise these names)
+# ---------------------------------------------------------------------------
+
+def test_fleet_package_surface():
+    for name in ("FleetTopology", "Population", "fleet_problem",
+                 "fleet_round", "init_fleet_state", "make_fleet_step",
+                 "run_convex", "sample_cohort", "gumbel_top_k",
+                 "churn_step", "make_selection", "SELECTION_RULES",
+                 "INNOV_INIT", "MIRROR_PREFIX", "REJOIN"):
+        assert hasattr(fleet, name), name

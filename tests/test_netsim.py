@@ -209,6 +209,44 @@ def test_price_mask_hand_computed_round():
     assert t_quiet < t_one < t_all
 
 
+def test_price_mask_large_M_matches_slow_reference():
+    """The vectorized pricer at fleet scale (M = 10⁴, straggler jitter
+    on) against an independent scalar event-by-event reference — a
+    subsample of rounds is replayed one arrival at a time, pinning both
+    the values AND the deterministic-per-seed ingress-queue
+    serialization order."""
+    M, K = 10_000, 6
+    cl = ncluster.make_cluster("straggler:10000@5ms/100Mbps")
+    rng = np.random.default_rng(7)
+    mask = rng.random((K, M)) < 0.1
+    bpu, dense = 4e4, 8e4
+    got = ncluster.price_mask(mask, bpu, cl, dense_bytes=dense)
+    assert got.shape == (K,)
+    # deterministic per seed: a fresh call replays the same jitter
+    np.testing.assert_array_equal(
+        got, ncluster.price_mask(mask, bpu, cl, dense_bytes=dense))
+
+    jitter = cl.compute_jitter(K)
+    rate = np.minimum(cl.up_bw_Bps, cl.server_bw_Bps)
+
+    def slow_round(r):
+        """One round, one arrival at a time (a literal single-server
+        queue; python's stable sort mirrors the argsort tie-break)."""
+        arrive = cl.compute_s * jitter[r] + cl.up_latency_s
+        busy = ready = 0.0
+        for m in sorted(range(M), key=lambda m: arrive[m]):
+            if mask[r, m]:
+                start = max(busy, arrive[m])
+                busy = start + bpu / rate[m]
+                ready = max(ready, busy)
+            else:
+                ready = max(ready, arrive[m])
+        return ready + cl.bcast.transfer_seconds(dense)
+
+    for r in (0, 2, K - 1):                   # subsampled hand replay
+        assert got[r] == pytest.approx(slow_round(r), rel=1e-12)
+
+
 def test_price_mask_shape_and_mismatch_errors():
     cl = ncluster.make_cluster("uniform:3@1ms/1Gbps")
     with pytest.raises(ValueError, match="rounds, workers"):
