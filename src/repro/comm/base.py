@@ -225,6 +225,49 @@ class CommPolicy:
         return float(sum(l.size * jnp.dtype(l.dtype).itemsize
                          for l in jax.tree_util.tree_leaves(grad_like)))
 
+    # -- the collective wire format (repro.devrun) ---------------------------
+    #
+    # When workers are pinned to real devices the masked payloads cross
+    # the interconnect as CONCRETE arrays, so each policy declares what
+    # those arrays are: ``wire_pack`` turns a stacked candidate payload
+    # (plus its encode ``aux`` and the upload mask) into a dict of
+    # fixed-shape wire arrays — a quiet worker's slot is all-zero, an
+    # absorbing element under the cross-device sum — ``wire_unpack``
+    # turns the gathered arrays back into per-worker flat float32
+    # summands, and ``wire_slot_bytes`` is the exact per-worker byte
+    # account the measured-vs-predicted HLO assertion
+    # (``repro.devrun.verify``) checks against.  The contract is
+    # round-trip BIT-exactness: ``wire_unpack(wire_pack(payload))`` must
+    # reproduce the masked payload's float32 flat buffer bitwise, so the
+    # device plane's trajectory stays bit-identical to the vmapped sync
+    # path.  The dense family moves the flat float32 buffer verbatim;
+    # LAQ overrides with packed integer codes + per-leaf quantizer steps
+    # (``repro.comm.laq``).
+
+    def wire_pack(self, layout, payload_st: Pytree, aux: Dict[str, Any],
+                  comm: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+        """Stacked candidate payload → wire arrays, each with a leading
+        worker dim.  ``layout`` is the tree's
+        ``repro.fastpath.layout.FlatLayout``; dense payloads ship the
+        masked ``(W, rows, LANES)`` float32 buffer."""
+        buf = layout.flatten_stacked(payload_st)
+        mask = comm.reshape((-1, 1, 1)).astype(buf.dtype)
+        return {"payload": buf * mask}
+
+    def wire_unpack(self, layout, wire: Dict[str, jnp.ndarray]
+                    ) -> jnp.ndarray:
+        """Gathered wire arrays (leading worker dim) → ``(W, rows, LANES)``
+        float32 summands; summing axis 0 in worker order reproduces the
+        engine's ``sum_reduce`` bit-exactly for float32 trees."""
+        return wire["payload"]
+
+    def wire_slot_bytes(self, layout) -> Dict[str, int]:
+        """Exact bytes of ONE worker's wire arrays, keyed like
+        :meth:`wire_pack`'s dict — what the all-gather actually moves per
+        participant (framing included: sub-block padding, scales)."""
+        from repro.fastpath.layout import LANES
+        return {"payload": layout.rows * LANES * 4}
+
     def transfer_seconds(self, grad_like: Pytree, link) -> float:
         """Seconds ONE triggered upload spends alone on ``link`` — a
         convenience for costing a single upload in isolation.  ``link``

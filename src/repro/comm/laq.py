@@ -41,7 +41,99 @@ import jax.numpy as jnp
 
 from repro.comm.base import CommPolicy, CommRound, PolicyState, Pytree
 from repro.core import lag
+from repro.fastpath.layout import LANES, SUB_ROWS
 from repro.kernels.lag_trigger import ops as lag_ops
+
+
+# ---------------------------------------------------------------------------
+# Collective wire format: packed integer codes + per-leaf quantizer steps
+# ---------------------------------------------------------------------------
+#
+# The device plane (``repro.devrun``) moves LAQ uploads across the
+# interconnect as what they ARE — b-bit integer codes plus one float32
+# quantizer step per leaf — instead of the dequantized float32 payload
+# the in-process drivers pass around (8× the bytes at b = 4).  The codes
+# are the biased values ``round(v/step) + qmax`` ∈ [0, 2qmax], packed
+# along the flat-buffer row dim at the next power-of-two width
+# ({2, 4, 8} bits per code in a uint8 buffer, uint16 above 8 bits); the
+# steps are the EXACT per-(worker, leaf) grid ``scale/qmax`` the encode
+# multiplied codes by (threaded out of the encode via
+# ``aux["wire_steps"]`` — transmitting the raw absmax scale and
+# re-dividing on the decode side is NOT bitwise-safe, because XLA may
+# round a division by a constant differently across compiled modules).
+# So ``unpack_codes(pack_codes(payload)) == payload`` BITWISE: decode is
+# a single correctly-rounded f32 multiply of the recovered integer by
+# the identical step the encoder used.  A quiet worker's slot is
+# all-zero (step 0 → every code decodes to 0) — absorbing under the
+# cross-device sum, so lazy skips cost nothing in the reduction.
+
+def wire_code_width(bits: int) -> int:
+    """Storage bits per code on the wire: ``bits`` rounded up to the next
+    packable width (2/4/8 sub-byte in uint8, else uint16)."""
+    return 2 if bits <= 2 else 4 if bits <= 4 else 8 if bits <= 8 else 16
+
+
+def _step_rows(layout, steps: jnp.ndarray) -> jnp.ndarray:
+    """(W, num_leaves) per-leaf steps → (W, rows) per-row steps via the
+    layout's static sub-block→leaf table."""
+    seg = jnp.asarray(layout.sub_leaf)
+    return jnp.repeat(steps[:, seg], SUB_ROWS, axis=1)
+
+
+def pack_codes(layout, payload_st: Pytree, steps: jnp.ndarray, bits: int,
+               comm: jnp.ndarray):
+    """Stacked dequantized payload → (codes, steps) wire arrays.
+
+    ``steps`` are the true encode quantizer steps (``aux["wire_steps"]``,
+    (W, num_leaves) float32); ``comm`` masks quiet workers to all-zero
+    slots.  ``codes`` is ``(W, rows/k, LANES)`` uint8 with k = 8/width
+    codes packed per byte (rows is a multiple of 256, so k ∈ {1, 2, 4}
+    always divides), or ``(W, rows, LANES)`` uint16 above 8 bits.
+
+    Code recovery ``round(payload·(1/step))`` tolerates the fresh 1/step
+    reciprocal: payload = code·step exactly, so the relative error is a
+    few ulps and |code| ≤ 32767 keeps the absolute error far below the
+    0.5 rounding margin.
+    """
+    qmax = float(2 ** (bits - 1) - 1)
+    W = steps.shape[0]
+    buf = layout.flatten_stacked(payload_st)           # (W, rows, LANES)
+    stw = steps * comm.astype(jnp.float32)[:, None]
+    rows = _step_rows(layout, stw)                     # (W, rows)
+    inv = jnp.where(rows > 0.0,
+                    1.0 / jnp.where(rows > 0.0, rows, 1.0), 0.0)
+    codes = jnp.clip(jnp.round(buf * inv[:, :, None]), -qmax, qmax)
+    store = jnp.uint16 if bits > 8 else jnp.uint8
+    biased = ((codes + qmax)
+              * comm.astype(jnp.float32)[:, None, None]).astype(store)
+    width = wire_code_width(bits)
+    if width == 16:
+        return biased, stw
+    k = 8 // width
+    b4 = biased.reshape(W, layout.rows // k, k, LANES)
+    packed = b4[:, :, 0, :]
+    for j in range(1, k):
+        packed = packed | (b4[:, :, j, :] << (j * width))
+    return packed, stw
+
+
+def unpack_codes(layout, codes: jnp.ndarray, steps: jnp.ndarray,
+                 bits: int) -> jnp.ndarray:
+    """Gathered (D, …) wire arrays → (D, rows, LANES) float32 payload
+    buffers — bitwise the payloads :func:`pack_codes` consumed."""
+    qmax = float(2 ** (bits - 1) - 1)
+    width = wire_code_width(bits)
+    D = codes.shape[0]
+    if width == 16:
+        fields = codes.astype(jnp.float32)
+    else:
+        k = 8 // width
+        m = (1 << width) - 1
+        parts = [(codes >> (j * width)) & m for j in range(k)]
+        fields = jnp.stack(parts, axis=2).reshape(
+            D, layout.rows, LANES).astype(jnp.float32)
+    rows = _step_rows(layout, steps)                   # (D, rows)
+    return (fields - qmax) * rows[:, :, None]
 
 
 class LAQPolicy(CommPolicy):
@@ -80,11 +172,14 @@ class LAQPolicy(CommPolicy):
             # batched flat-buffer encode already ran for all workers
             # (repro.fastpath): this worker's slice arrives via ctx.fast
             return ctx.fast["payload"], {"resid_new": ctx.fast["resid_new"],
-                                         "lhs_sq": ctx.fast["lhs_sq"]}
-        payload, resid_new, lhs = lag_ops.laq_encode(
+                                         "lhs_sq": ctx.fast["lhs_sq"],
+                                         "wire_steps":
+                                             ctx.fast["wire_steps"]}
+        payload, resid_new, lhs, steps = lag_ops.laq_encode(
             ctx.grad_new, st["grad_hat"], st["resid"], bits=self.bits,
-            use_ref=not self.use_pallas)
-        return payload, {"resid_new": resid_new, "lhs_sq": lhs}
+            use_ref=not self.use_pallas, return_steps=True)
+        return payload, {"resid_new": resid_new, "lhs_sq": lhs,
+                         "wire_steps": steps}
 
     def should_upload(self, ctx: CommRound, st: PolicyState, payload: Pytree,
                       aux: Dict[str, Any]) -> jnp.ndarray:
@@ -107,9 +202,11 @@ class LAQPolicy(CommPolicy):
         # trigger-sqnorm sweep — as TWO batched launches for all workers,
         # per-(worker, leaf) quantizer scales preserved by the layout's
         # static block→leaf table
-        payload, resid_new, lhs = plan.laq_encode(
-            grads, st["grad_hat"], st["resid"], bits=self.bits)
-        return {"payload": payload, "resid_new": resid_new, "lhs_sq": lhs}
+        payload, resid_new, lhs, steps = plan.laq_encode(
+            grads, st["grad_hat"], st["resid"], bits=self.bits,
+            return_steps=True)
+        return {"payload": payload, "resid_new": resid_new, "lhs_sq": lhs,
+                "wire_steps": steps}
 
     def fast_decode(self, plan, st: PolicyState, payload: Pytree,
                     aux: Dict[str, Any], comm: jnp.ndarray, *,
@@ -128,3 +225,31 @@ class LAQPolicy(CommPolicy):
         """b bits per coordinate + one float32 scale per leaf."""
         leaves = jax.tree_util.tree_leaves(grad_like)
         return float(sum(l.size * self.bits / 8.0 + 4.0 for l in leaves))
+
+    # -- the collective wire format (repro.devrun) ---------------------------
+
+    def wire_pack(self, layout, payload_st: Pytree, aux: Dict[str, Any],
+                  comm: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+        """Packed b-bit codes + per-leaf quantizer steps instead of the
+        dense f32 buffer — what a triggered LAQ upload actually is on the
+        wire."""
+        if "wire_steps" not in aux:
+            raise ValueError(
+                "LAQ wire_pack needs the encode's quantizer steps in "
+                "aux['wire_steps'] (threaded by LAQPolicy.encode / "
+                "fast_precompute) — got aux keys "
+                f"{sorted(aux)}")
+        codes, steps = pack_codes(layout, payload_st, aux["wire_steps"],
+                                  self.bits, comm)
+        return {"codes": codes, "steps": steps}
+
+    def wire_unpack(self, layout, wire: Dict[str, jnp.ndarray]
+                    ) -> jnp.ndarray:
+        return unpack_codes(layout, wire["codes"], wire["steps"],
+                            self.bits)
+
+    def wire_slot_bytes(self, layout) -> Dict[str, int]:
+        width = wire_code_width(self.bits)
+        code_bytes = layout.rows * LANES * 2 if width == 16 \
+            else (layout.rows // (8 // width)) * LANES
+        return {"codes": code_bytes, "steps": layout.num_leaves * 4}

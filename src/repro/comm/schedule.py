@@ -134,6 +134,17 @@ class ScheduledPolicy(CommPolicy):
     def wire_bytes(self, grad_like: Pytree) -> float:
         return self.inner.wire_bytes(grad_like)
 
+    def wire_pack(self, layout, payload_st: Pytree, aux: Dict[str, Any],
+                  comm: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+        return self.inner.wire_pack(layout, payload_st, aux, comm)
+
+    def wire_unpack(self, layout, wire: Dict[str, jnp.ndarray]
+                    ) -> jnp.ndarray:
+        return self.inner.wire_unpack(layout, wire)
+
+    def wire_slot_bytes(self, layout) -> Dict[str, int]:
+        return self.inner.wire_slot_bytes(layout)
+
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return (f"ScheduledPolicy({self.inner!r}, "
                 f"schedule={self.schedule.name!r})")

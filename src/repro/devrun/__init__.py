@@ -1,0 +1,21 @@
+"""repro.devrun — real multi-device execution of the lazy round.
+
+One worker per device under ``shard_map`` (topology spec ``devices:D``),
+compressed collectives (the policies' packed wire arrays instead of
+dense f32 deltas), and the measured-vs-predicted wire-bytes loop closed
+against the compiled HLO.  See ``runner`` (step builders) and ``verify``
+(wire accounting); docs/ARCHITECTURE.md §device plane has the seam map.
+"""
+from repro.devrun.runner import (init_device_state, jit_device_step,
+                                 make_device_step, run_rounds)
+from repro.devrun.verify import (FRAMING_TOLERANCE, GATHER_REL_TOL,
+                                 assert_wire_accounting,
+                                 check_wire_accounting, compiled_hlo,
+                                 framing_ratio, predicted_collective_bytes)
+
+__all__ = [
+    "init_device_state", "make_device_step", "jit_device_step",
+    "run_rounds", "compiled_hlo", "predicted_collective_bytes",
+    "framing_ratio", "check_wire_accounting", "assert_wire_accounting",
+    "FRAMING_TOLERANCE", "GATHER_REL_TOL",
+]

@@ -261,6 +261,18 @@ class Experiment:
             step_fn = jax.jit(fleet_lib.make_fleet_step(
                 cfg, tcfg, topo, policy=policy, server=server,
                 schedule_seed=self.seed))
+        elif getattr(topo, "name", None) == "devices":
+            # real multi-device plane: shard_map workers + packed wire
+            # collectives, falling back to the vmapped step on a process
+            # without the devices (function-level import — repro.devrun
+            # consumes the engine, like repro.dist)
+            from repro import devrun
+            state = devrun.init_device_state(
+                jax.random.PRNGKey(self.seed), cfg, tcfg, policy=policy,
+                server=server, topology=topo)
+            step_fn = devrun.jit_device_step(
+                cfg, tcfg, policy=policy, server=server, topology=topo,
+                schedule_seed=self.seed)
         else:
             state = lag_trainer.init_state(jax.random.PRNGKey(self.seed),
                                            cfg, tcfg, policy=policy,

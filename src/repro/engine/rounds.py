@@ -67,7 +67,9 @@ def policy_rounds(policy: CommPolicy, lagcfg: lag.LAGConfig, params: Pytree,
                   grad_at_hat: Optional[Pytree] = None,
                   step: Optional[jnp.ndarray] = None,
                   key: Optional[jnp.ndarray] = None,
-                  theta_view: Optional[Pytree] = None):
+                  theta_view: Optional[Pytree] = None,
+                  worker_offset=0,
+                  wire_layout=None):
     """Vmap a ``CommPolicy`` over the leading worker/pod dim.
 
     Returns (comm (W,) bool, delta stacked pytree, new policy-state dict).
@@ -75,6 +77,18 @@ def policy_rounds(policy: CommPolicy, lagcfg: lag.LAGConfig, params: Pytree,
     (round index + shared per-round PRNG key) so schedule policies can
     compute their mask; each worker additionally sees its own
     ``worker_id`` slot.
+
+    ``worker_offset`` shifts the ``worker_id`` range — the device plane
+    (``repro.devrun``) runs this function per shard at local W = 1 and
+    passes ``lax.axis_index`` so worker m on device m sees the SAME id it
+    would in the vmapped sync run (schedule policies' round-robin masks
+    depend on it).
+
+    ``wire_layout`` (a ``repro.fastpath.FlatLayout``) switches the return
+    to a 4-tuple ``(comm, delta, new_pst, wire)`` where ``wire`` is the
+    policy's collective wire dict (``policy.wire_pack``) for this shard's
+    candidate payload — the concrete arrays the device plane moves
+    through the cross-device gather instead of the dense delta tree.
 
     ``theta_view`` (stacked (W, …), optional) is the bounded-staleness
     hook: when an async topology hands each worker the parameters it
@@ -102,7 +116,7 @@ def policy_rounds(policy: CommPolicy, lagcfg: lag.LAGConfig, params: Pytree,
     hist = lag_state["hist"]
     k_idx = jnp.zeros((), jnp.int32) if step is None \
         else jnp.asarray(step, jnp.int32)
-    worker_ids = jnp.arange(W, dtype=jnp.int32)
+    worker_ids = worker_offset + jnp.arange(W, dtype=jnp.int32)
     theta_stacked = theta_view is not None
     theta_arg = theta_view if theta_stacked else params
     th_ax = 0 if theta_stacked else None
@@ -117,6 +131,12 @@ def policy_rounds(policy: CommPolicy, lagcfg: lag.LAGConfig, params: Pytree,
                 f"{sorted({str(l.dtype) for l in jax.tree_util.tree_leaves(grads)})}"
                 f" — use fastpath='auto'/'off' for x64 runs")
         plan = None
+    if plan is not None and plan.below_dispatch_floor(grads):
+        # auto mode only: tiny stacked trees (rows × workers below the
+        # static floor) run the jnp oracle outright — the batched launch
+        # cannot amortize its flatten/scatter overhead there (the
+        # convex-d50 M=1 regression BENCH_perf_comm.json pinned)
+        plan = None
     fast = None
     if plan is not None:
         fast = policy.fast_precompute(plan, grads, pst, theta=theta_arg,
@@ -128,12 +148,22 @@ def policy_rounds(policy: CommPolicy, lagcfg: lag.LAGConfig, params: Pytree,
             ctx = CommRound(theta=theta_m, grad_new=g, hist=hist, cfg=lagcfg,
                             L_m=lm, grad_at_hat=gah_m, k=k_idx,
                             worker_id=wid, key=key)
-            return run_round(policy, ctx, pst_m)
+            if wire_layout is None:
+                return run_round(policy, ctx, pst_m)
+            # wire route keeps payload + aux visible past the decode so
+            # the stacked candidate can be packed for the collective
+            payload, aux = policy.encode(ctx, pst_m)
+            comm_m = policy.should_upload(ctx, pst_m, payload, aux)
+            delta_m, new_st = policy.decode(ctx, pst_m, payload, aux, comm_m)
+            return comm_m, delta_m, new_st, payload, aux
 
-        comm, delta, new_pst = jax.vmap(
-            one_worker, in_axes=(0, 0, 0, 0, 0, th_ax))(
+        out = jax.vmap(one_worker, in_axes=(0, 0, 0, 0, 0, th_ax))(
             grads, pst, gah, L_arr, worker_ids, theta_arg)
-        return comm, delta, new_pst
+        if wire_layout is None:
+            return out
+        comm, delta, new_pst, payload, aux = out
+        wire = policy.wire_pack(wire_layout, payload, aux, comm)
+        return comm, delta, new_pst, wire
 
     # fast route: encode + trigger stay per-worker (cheap — the heavy
     # reductions arrive precomputed in fast_m), the state fold is batched
@@ -150,7 +180,10 @@ def policy_rounds(policy: CommPolicy, lagcfg: lag.LAGConfig, params: Pytree,
     delta, new_pst = policy.fast_decode(plan, pst, payload, aux, comm,
                                         theta=theta_arg,
                                         theta_stacked=theta_stacked)
-    return comm, delta, new_pst
+    if wire_layout is None:
+        return comm, delta, new_pst
+    wire = policy.wire_pack(wire_layout, payload, aux, comm)
+    return comm, delta, new_pst, wire
 
 
 def sum_reduce(comm: jnp.ndarray, delta: Pytree) -> Pytree:
@@ -188,7 +221,25 @@ def lag_round(policy: CommPolicy, server: ServerOptimizer,
                                          step=step, key=key,
                                          theta_view=theta_view)
     sum_delta = (reduce_fn or sum_reduce)(comm, delta)
+    return finish_round(policy, server, lagcfg, params=params,
+                        opt_state=opt_state, lag_state=lag_state, comm=comm,
+                        sum_delta=sum_delta, new_pst=new_pst, step=step)
 
+
+def finish_round(policy: CommPolicy, server: ServerOptimizer,
+                 lagcfg: lag.LAGConfig, *, params: Pytree,
+                 opt_state: Optional[Pytree], lag_state: Dict,
+                 comm: jnp.ndarray, sum_delta: Pytree, new_pst: Dict,
+                 step: jnp.ndarray
+                 ) -> Tuple[Pytree, Optional[Pytree], Dict, Dict]:
+    """The server half of :func:`lag_round`, from the reduced Σ δ∇ on:
+    aggregate recursion, server step, history push, counters, metrics.
+
+    Split out so drivers that own their OWN reduction — the device plane
+    (``repro.devrun``) reduces packed wire payloads across real devices
+    inside ``shard_map`` — can rejoin the shared round here and stay
+    bit-identical with the in-process topologies from this point down.
+    """
     # server recursion (eq. 4 aggregate) + the pluggable server step
     nabla_new = lag.tree_add(lag_state["nabla"], sum_delta)
     new_params, new_opt = server.apply(params, opt_state, nabla_new, step,

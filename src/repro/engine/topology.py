@@ -233,6 +233,47 @@ class AsyncShards(Topology):
                 f"staleness={self.staleness})")
 
 
+class DeviceWorkers(Topology):
+    """One lazy worker pinned per REAL device — the ``repro.devrun``
+    execution plane.
+
+    Same round math as ``BatchShards`` (the 50-step lag-wk golden's
+    upload decisions are reproduced exactly, losses to float tolerance —
+    pinned by tests/test_devrun.py), but the
+    units live on separate ``jax.devices()`` under ``shard_map``: each
+    device runs ``engine.rounds.policy_rounds`` on its own shard at
+    local W = 1, and the masked deltas cross the interconnect as the
+    policy's PACKED wire arrays (``CommPolicy.wire_pack`` — LAQ moves
+    b-bit integer codes + per-leaf quantizer steps, not dense f32),
+    gathered and summed in worker order so the reduction is bit-exact
+    with the in-process ``sum_reduce``.  The step builder lives in
+    ``repro.devrun.runner``; on a machine with fewer devices than
+    workers (``available()`` False — e.g. the default 1-CPU test
+    process) drivers fall back to the vmapped ``BatchShards`` math,
+    which is the same trajectory.  CI exercises the real multi-device
+    path via ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+    subprocess tests.
+    """
+    name = "devices"
+
+    def num_devices(self, default: int = None) -> int:
+        """The worker/device count: ``devices:D`` pins D, bare
+        ``devices`` takes every visible device (or the trainer default
+        when given)."""
+        if self.num_units:
+            return self.num_units
+        return default or len(jax.devices())
+
+    def available(self, default: int = None) -> bool:
+        """True when this process actually has enough devices."""
+        return len(jax.devices()) >= self.num_devices(default)
+
+    def device_mesh(self, default: int = None):
+        """1-D ``("workers",)`` mesh over the first D devices."""
+        from repro.launch.mesh import make_mesh
+        return make_mesh((self.num_devices(default),), ("workers",))
+
+
 # ---------------------------------------------------------------------------
 # Convex backend
 # ---------------------------------------------------------------------------
@@ -333,6 +374,7 @@ TOPOLOGIES = {
     "shards": BatchShards,
     "pods": PodMesh,
     "async": AsyncShards,
+    "devices": DeviceWorkers,
     "fleet": _make_fleet,
 }
 
@@ -347,7 +389,8 @@ def make_topology(spec, mesh=None) -> Topology:
     Grammar: ``<name>[:<units>][@<staleness>]`` — ``"sim"``,
     ``"shards"``, ``"pods:2"`` (two lazy pods), ``"async:4@2"`` (four
     bounded-staleness workers, slowest 2 rounds behind; ``"async"``
-    alone defaults to staleness 1).  The fleet topology requires both
+    alone defaults to staleness 1), ``"devices:8"`` (one worker per
+    real device via ``repro.devrun``).  The fleet topology requires both
     parts: ``"fleet:<population>@<cohort>"`` — ``"fleet:100000@64"``
     samples a 64-client cohort per round from 10⁵ clients.  ``mesh``
     reaches placement-aware backends (the pod axis pin).

@@ -151,8 +151,12 @@ def absmax_blocks(g: jnp.ndarray, q: jnp.ndarray, e: jnp.ndarray,
 
 def _laq_kernel(qmax, g_ref, q_ref, e_ref, s_ref, p_ref, eout_ref, sq_ref):
     v = _slab(g_ref) - _slab(q_ref) + _slab(e_ref)
-    # per-(worker, sub-block) scale → the leaf's own quantizer grid
-    step = s_ref[...].astype(jnp.float32)[:, :, None, None] / qmax
+    # per-(worker, sub-block) quantizer step — precomputed OUTSIDE the
+    # kernel (scale/qmax divides once in plan.laq_encode) so the exact
+    # f32 grid the payload multiply uses is also the value the
+    # collective wire format transmits; a division in the kernel body
+    # could round differently from one in the surrounding module
+    step = s_ref[...].astype(jnp.float32)[:, :, None, None]
     inv = jnp.where(step > 0.0, 1.0 / jnp.where(step > 0.0, step, 1.0), 0.0)
     codes = jnp.clip(jnp.round(v * inv), -qmax, qmax)
     p = codes * step
@@ -162,21 +166,21 @@ def _laq_kernel(qmax, g_ref, q_ref, e_ref, s_ref, p_ref, eout_ref, sq_ref):
 
 
 def laq_encode_blocks(g: jnp.ndarray, q: jnp.ndarray, e: jnp.ndarray,
-                      scales_subs: jnp.ndarray, bits: int,
+                      steps_subs: jnp.ndarray, bits: int,
                       *, interpret: bool = True):
     """Fused b-bit encode over the batched flat buffer.
 
-    ``scales_subs`` is the (W, nsubs) per-sub-block quantizer scale — the
-    per-(worker, LEAF) absmax gathered through the layout's static
-    ``sub_leaf`` table, so batching preserves LAQ's per-leaf grid.
-    Returns (payload (W, R, L) f32, residual (W, R, L) f32, ‖p‖²
-    per-sub-block partials (W, nsubs)).
+    ``steps_subs`` is the (W, nsubs) per-sub-block quantizer STEP
+    (absmax scale already divided by qmax) — the per-(worker, LEAF)
+    value gathered through the layout's static ``sub_leaf`` table, so
+    batching preserves LAQ's per-leaf grid.  Returns (payload (W, R, L)
+    f32, residual (W, R, L) f32, ‖p‖² per-sub-block partials (W, nsubs)).
     """
     W, R = g.shape[0], g.shape[1]
     wc, Wp, rows = _tiling(W, R, interpret)
     qmax = float(2 ** (bits - 1) - 1)
     gp, qp, ep = (_pad_w(x, Wp) for x in (g, q, e))
-    sp = _pad_w(scales_subs, Wp)
+    sp = _pad_w(steps_subs, Wp)
     p, eout, sq = pl.pallas_call(
         functools.partial(_laq_kernel, qmax),
         grid=(Wp // wc, R // rows),

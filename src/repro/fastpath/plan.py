@@ -37,6 +37,17 @@ Pytree = Any
 
 MODES = ("auto", "on")
 
+#: auto-mode dispatch floor, in flat-buffer rows × workers.  Below this
+#: much work the batched launch cannot amortize its flatten/scatter
+#: overhead and the jnp oracle wins outright — the regression
+#: ``BENCH_perf_comm.json`` pinned at convex-d50 M=1 (256 rows × 1
+#: worker: batched 0.88× the per-leaf route, 0.09× the oracle).  1024 =
+#: four single-block workers or one worker of four grid blocks; at and
+#: above it the batched plane's measured speedups hold.  Forced plans
+#: (``mode="on"``) ignore the floor — they exist for kernel parity, not
+#: speed.
+SMALL_DISPATCH_ROWS = 1024
+
 
 def on_tpu() -> bool:
     from repro.kernels import on_tpu as _on_tpu
@@ -73,6 +84,21 @@ class FastPathPlan:
         return all(any(jnp.dtype(l.dtype) == jnp.dtype(d)
                        for d in SUPPORTED_DTYPES)
                    for l in jax.tree_util.tree_leaves(tree))
+
+    def below_dispatch_floor(self, tree_st: Pytree) -> bool:
+        """True when a stacked tree is too small for the batched launch
+        to pay for itself (rows × workers < ``SMALL_DISPATCH_ROWS``) —
+        ``repro.engine.rounds.policy_rounds`` then takes the jnp oracle
+        instead.  Static: decided from shapes at trace time.  Forced
+        plans always return False (the parity tier runs the kernels on
+        every shape by design)."""
+        if self.forced:
+            return False
+        leaves = jax.tree_util.tree_leaves(tree_st)
+        if not leaves:
+            return True
+        W = leaves[0].shape[0]
+        return self.layout_for(tree_st).rows * W < SMALL_DISPATCH_ROWS
 
     # -- layout -------------------------------------------------------------
 
@@ -142,32 +168,49 @@ class FastPathPlan:
         return self._total(parts, lo)
 
     def laq_encode(self, g_st: Pytree, q_st: Pytree, e_st: Pytree,
-                   *, bits: int):
+                   *, bits: int, return_steps: bool = False):
         """Batched LAQ encode with per-(worker, leaf) quantizer scales.
 
         Returns (payload stacked f32 tree, residual stacked f32 tree,
         trigger LHS ‖payload‖² (W,)) — the semantics of
         ``repro.kernels.lag_trigger.ops.laq_encode`` for every worker in
         two launches (absmax sweep + fused encode sweep) instead of
-        2·L·W.
+        2·L·W.  ``return_steps`` appends the ``(W, num_leaves)`` float32
+        quantizer steps scale/qmax — the grid the encode kernel divides
+        by — which the collective wire format (``repro.comm.laq``)
+        transmits so packed integer codes decode to the payload bitwise
+        (payload coordinates are exactly code·step; see
+        ``lag_trigger.ops.laq_encode`` for why the step, not the raw
+        scale, is the safe thing to transmit).  The scale/qmax division
+        happens exactly once, here — the encode kernel receives the
+        already-divided steps as an operand — so the grid the payload
+        multiply used and the grid on the wire are the same f32 value on
+        every backend.
         """
         lo = self.layout_for(g_st)
         W = jax.tree_util.tree_leaves(g_st)[0].shape[0]
         if lo.nblocks == 0:
             zt = jax.tree_util.tree_map(
                 lambda l: jnp.zeros(l.shape, jnp.float32), g_st)
-            return zt, zt, jnp.zeros((W,), jnp.float32)
+            out = (zt, zt, jnp.zeros((W,), jnp.float32))
+            return out + (jnp.zeros((W, lo.num_leaves), jnp.float32),) \
+                if return_steps else out
         fg = lo.flatten_stacked(g_st)
         fq = lo.flatten_stacked(q_st)
         fe = lo.flatten_stacked(e_st)
         parts = kernels.absmax_blocks(fg, fq, fe, interpret=self.interpret)
         scales = self._per_leaf(parts, lo, "max")          # (W, num_leaves)
-        scales_subs = scales[:, jnp.asarray(lo.sub_leaf)]
+        # divide ONCE: this per-leaf step array both feeds the kernel
+        # (gathered per sub-block) and is what ``return_steps`` hands to
+        # the collective wire format — one rounding, everywhere
+        steps = scales / float(2 ** (bits - 1) - 1)
+        steps_subs = steps[:, jnp.asarray(lo.sub_leaf)]
         payload, resid, sq = kernels.laq_encode_blocks(
-            fg, fq, fe, scales_subs, bits, interpret=self.interpret)
-        return (lo.unflatten_stacked(payload, like=jnp.float32),
-                lo.unflatten_stacked(resid, like=jnp.float32),
-                self._total(sq, lo))
+            fg, fq, fe, steps_subs, bits, interpret=self.interpret)
+        out = (lo.unflatten_stacked(payload, like=jnp.float32),
+               lo.unflatten_stacked(resid, like=jnp.float32),
+               self._total(sq, lo))
+        return out + (steps,) if return_steps else out
 
     def _masked(self, a: Pytree, b_st: Pytree, mask: jnp.ndarray, mode: str,
                 a_stacked: bool) -> Pytree:

@@ -81,8 +81,10 @@ def fused_tree_sqnorm(tree, *, use_ref: bool = False) -> jnp.ndarray:
     return total
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "use_ref"))
-def laq_encode(g_new, q_hat, resid, *, bits: int = 4, use_ref: bool = False):
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "use_ref", "return_steps"))
+def laq_encode(g_new, q_hat, resid, *, bits: int = 4, use_ref: bool = False,
+               return_steps: bool = False):
     """LAQ candidate upload over a pytree: per-leaf b-bit quantization of
     the error-compensated innovation v = (∇ − q̂) + e.
 
@@ -91,12 +93,25 @@ def laq_encode(g_new, q_hat, resid, *, bits: int = 4, use_ref: bool = False):
     leaves.  The Pallas path is one absmax sweep + ONE fused
     quantize/residual/sqnorm sweep per leaf; ``use_ref`` selects the jnp
     oracle (what CPU runs by default — XLA fuses it adequately there).
+
+    ``return_steps`` appends the per-leaf quantizer steps scale/qmax as a
+    ``(num_leaves,)`` float32 array (pytree order).  The STEP — not the
+    raw absmax scale — is what the collective wire format
+    (``repro.comm.laq`` pack/unpack) transmits: payload coordinates are
+    exactly code·step, so a decoder multiplying recovered integer codes
+    by this same float32 step reproduces the payload bitwise.
+    (Re-dividing scale/qmax on the decode side is NOT bitwise-safe: XLA
+    may rewrite division by a constant differently across compiled
+    modules, and a 1-ulp step difference changes every payload bit.
+    The division below sits in the same compiled module as the encode's
+    own, so the returned step is the value the encode actually used.)
     """
     g_leaves, tdef = jax.tree_util.tree_flatten(g_new)
     q_leaves = jax.tree_util.tree_leaves(q_hat)
     e_leaves = jax.tree_util.tree_leaves(resid)
     interp = not on_tpu()
-    ps, es, lhs = [], [], jnp.zeros((), jnp.float32)
+    qmax = float(2 ** (bits - 1) - 1)
+    ps, es, sts, lhs = [], [], [], jnp.zeros((), jnp.float32)
     for g, q, e in zip(g_leaves, q_leaves, e_leaves):
         if use_ref:
             scale = ref.innovation_absmax(g, q, e)
@@ -110,6 +125,11 @@ def laq_encode(g_new, q_hat, resid, *, bits: int = 4, use_ref: bool = False):
             enew = e2n.reshape(-1)[:g.size].reshape(g.shape)
         ps.append(p)
         es.append(enew)
+        sts.append(jnp.asarray(scale, jnp.float32).reshape(()) / qmax)
         lhs += sq
-    return (jax.tree_util.tree_unflatten(tdef, ps),
-            jax.tree_util.tree_unflatten(tdef, es), lhs)
+    out = (jax.tree_util.tree_unflatten(tdef, ps),
+           jax.tree_util.tree_unflatten(tdef, es), lhs)
+    if return_steps:
+        return out + (jnp.stack(sts) if sts
+                      else jnp.zeros((0,), jnp.float32),)
+    return out

@@ -49,9 +49,11 @@ def build_argparser():
                         "algo default (e.g. 'prox-l1@1e-4', 'momentum@0.9')")
     p.add_argument("--topology", default=None,
                    help="repro.engine topology spec (e.g. 'shards', "
-                        "'pods:2', 'async:4@2', 'fleet:100000@64'); "
-                        "default: flat batch shards.  fleet:N@k samples a "
-                        "k-client cohort per round from N virtual clients")
+                        "'pods:2', 'async:4@2', 'devices:8', "
+                        "'fleet:100000@64'); default: flat batch shards.  "
+                        "devices:D pins one worker per real device "
+                        "(repro.devrun); fleet:N@k samples a k-client "
+                        "cohort per round from N virtual clients")
     p.add_argument("--fleet-churn", type=float, default=0.0,
                    help="fleet only: per-round client leave probability "
                         "(clients re-join with stale state)")
@@ -126,11 +128,21 @@ def main(argv=None):
         make_cluster(args.cluster,
                      num_workers=topo.population if fleet else W)
 
+    devices = getattr(topo, "name", None) == "devices"
     if fleet:
         from repro import fleet as fleet_lib
         state = fleet_lib.init_fleet_state(
             jax.random.PRNGKey(args.seed), cfg, tcfg, topo)
         train_step = fleet_lib.make_fleet_step(cfg, tcfg, topo)
+    elif devices:
+        # one worker per real device (repro.devrun): shard_map round,
+        # packed wire collectives, per-worker state pinned at init —
+        # the devrun builders own placement, so the generic host-mesh
+        # sharding pass below is skipped
+        from repro import devrun
+        state = devrun.init_device_state(jax.random.PRNGKey(args.seed),
+                                         cfg, tcfg, topology=topo)
+        train_step = devrun.make_device_step(cfg, tcfg, topology=topo)
     else:
         state = init_state(jax.random.PRNGKey(args.seed), cfg, tcfg,
                            topology=topo)
@@ -140,8 +152,9 @@ def main(argv=None):
         state, start = restore(args.ckpt_dir, state)
         print(f"resumed from step {start}")
     with mesh_context(mesh):
-        state_sh = tree_shardings(state, mesh)
-        state = jax.device_put(state, state_sh)
+        if not devices:
+            state_sh = tree_shardings(state, mesh)
+            state = jax.device_put(state, state_sh)
         step_fn = jax.jit(train_step, donate_argnums=(0,))
 
         stream = TokenStream(vocab=cfg.vocab_size, seed=args.seed)

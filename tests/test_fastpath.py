@@ -339,6 +339,69 @@ def test_make_plan_modes():
         fastpath.make_plan("maybe")
 
 
+def test_below_dispatch_floor_unit():
+    """The auto-mode small-shape floor (SMALL_DISPATCH_ROWS): static,
+    shape-only, and never applied to forced plans."""
+    auto = FastPathPlan("auto")
+    forced = FastPathPlan("on")
+    tiny = make_tree((50,), W=1)        # 1 grid block = 256 rows × 1
+    assert auto.below_dispatch_floor(tiny)
+    assert not forced.below_dispatch_floor(tiny)      # parity tier exempt
+    assert auto.below_dispatch_floor({})              # empty tree
+    assert auto.below_dispatch_floor(make_tree((50,), W=3))     # 768
+    assert not auto.below_dispatch_floor(make_tree((50,), W=4))  # 1024
+    assert not auto.below_dispatch_floor(
+        make_tree((4 * fastpath.BLOCK,), W=1))        # 1024 rows × 1
+
+
+def test_small_shape_dispatch_choice(monkeypatch):
+    """The convex-d50 M=1 regression fix: under an ACTIVE auto plan,
+    ``policy_rounds`` must route sub-floor stacked trees straight to the
+    jnp oracle — ``fast_precompute`` is never consulted — while at-floor
+    trees still ride the plane."""
+    from repro import comm
+    from repro.engine import rounds
+    from repro.fastpath import plan as plan_mod
+
+    policy = comm.make_policy("lag-wk", fastpath="auto")
+    monkeypatch.setattr(plan_mod, "on_tpu", lambda: True)   # activate auto
+    assert fastpath.active_plan(policy) is not None
+    calls = []
+
+    def spy(self, plan, grads, st, **kw):
+        calls.append(jax.tree_util.tree_leaves(grads)[0].shape[0])
+        return None          # observe routing only; oracle math either way
+
+    monkeypatch.setattr(type(policy), "fast_precompute", spy)
+    params = {"w": jnp.zeros((50,))}
+
+    def run(W):
+        cfg = lag.LAGConfig(num_workers=W, alpha=0.1, D=2, xi=0.1)
+        grads = {"w": jnp.ones((W, 50))}
+        st = {"grad_hat": {"w": jnp.zeros((W, 50))},
+              "hist": lag.hist_init(2)}
+        rounds.policy_rounds(policy, cfg, params, grads, st)
+
+    run(1)                   # 256 rows × 1 worker < 1024: oracle outright
+    assert calls == []
+    run(4)                   # 256 × 4 = 1024: the plane serves it
+    assert calls == [4]
+
+
+def test_small_shape_parity_convex_d50():
+    """The regression shape itself (d = 50, M = 1): floor-dispatched
+    oracle vs the forced plane — identical upload decisions, close
+    losses, so the dispatch switch is invisible to trajectories."""
+    from repro.core import convex, simulate
+    prob = convex.synthetic("linreg", num_workers=1, n_per=12, d=50, seed=3)
+    for algo in ("lag-wk", "laq@4"):
+        r0 = simulate.run(prob, algo, K=20)
+        r1 = simulate.run(prob, algo, K=20, fastpath="on")
+        np.testing.assert_array_equal(np.asarray(r0.comm_mask),
+                                      np.asarray(r1.comm_mask))
+        np.testing.assert_allclose(r0.losses, r1.losses, rtol=1e-5)
+
+
 def test_policy_resolves_plan_once():
     from repro import comm
     pol = comm.make_policy("lag-wk", fastpath="on")
