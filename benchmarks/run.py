@@ -22,8 +22,8 @@ def main(argv=None) -> int:
     p.add_argument("--dryrun-dir", default="experiments/dryrun")
     args = p.parse_args(argv)
 
-    from benchmarks import (lag_convex, lag_deep, fleet_scale, netsim_sweep,
-                            perf_comm)
+    from benchmarks import (lag_convex, lag_deep, fleet_scale, graph_sweep,
+                            netsim_sweep, perf_comm)
 
     rows, claims = [], []
     suites = [
@@ -54,6 +54,8 @@ def main(argv=None) -> int:
             steps=12 if args.quick else 50)),
         ("fleet", lambda: fleet_scale.fleet_suite(
             K=100 if args.quick else 300)),
+        ("graph", lambda: graph_sweep.graph_suite(
+            K=200 if args.quick else 400)),
         ("perf_comm", lambda: perf_comm.perf_comm_suite(quick=args.quick)),
     ]
     for name, fn in suites:

@@ -130,6 +130,11 @@ class Experiment:
                 # (O(K·k), never O(K·N)) via the cohort-aware pricer
                 netsim_cluster.price_fleet_report(report, self.cluster,
                                                   dense_bytes=dense)
+            elif "edge_dst" in report.extras:
+                # graph runs: the (K, E) mask is per DIRECTED EDGE — one
+                # link draw per edge, in-edges drain per destination node
+                netsim_cluster.price_edge_report(report, self.cluster,
+                                                 dense_bytes=dense)
             else:
                 netsim_cluster.price_report(report, self.cluster,
                                             dense_bytes=dense)
@@ -180,12 +185,23 @@ class Experiment:
     def _run_convex(self) -> RunReport:
         prob = self.problem
         M = prob.num_workers
+        topo = make_topology(self.topology or "sim", mesh=self.mesh)
+        is_graph = getattr(topo, "name", None) == "graph"
         alpha = self.alpha
         if alpha is None:
             # paper defaults: α = 1/L, except 1/(M·L) for the one-upload-
-            # per-round IAG schedules
-            alpha = 1.0 / (M * prob.L) if "iag" in self.algo \
-                else 1.0 / prob.L
+            # per-round IAG schedules.  Decentralized runs take the
+            # diffusion-stable default instead: the adapt step applies
+            # α·W·∇L_i(θ_i) LOCALLY (so uniform mixing reproduces the
+            # centralized recursion), which is only stable when the local
+            # step α·W stays under 2/max(L_m) — 1/L diverges on sparse
+            # graphs the moment L_m is heterogeneous.
+            if is_graph:
+                alpha = 1.0 / (M * float(jnp.max(prob.L_m)))
+            elif "iag" in self.algo:
+                alpha = 1.0 / (M * prob.L)
+            else:
+                alpha = 1.0 / prob.L
         xi = self.xi
         if xi is None:
             xi = (10.0 / self.D) if self.algo == "lag-ps" else (1.0 / self.D)
@@ -193,12 +209,27 @@ class Experiment:
             num_workers=M, alpha=float(alpha), D=self.D, xi=float(xi),
             rule="ps" if "lag-ps" in self.algo else "wk",
             rhs_floor=self.rhs_floor)
-        # num-IAG samples workers ∝ L_m (paper Sec. 4)
-        probs = prob.L_m / jnp.sum(prob.L_m) if self.algo.startswith("num-") \
-            else None
+        # num-IAG samples lazy units ∝ L_m (paper Sec. 4); on a graph the
+        # lazy units are the E directed EDGES, so each edge inherits its
+        # SOURCE node's smoothness weight
+        if self.algo.startswith("num-"):
+            L_u = prob.L_m[topo.spec.edge_src] if is_graph else prob.L_m
+            probs = L_u / jnp.sum(L_u)
+        else:
+            probs = None
         policy = self._resolve_policy(probs=probs)
         server = self._resolve_server()
-        topo = make_topology(self.topology or "sim", mesh=self.mesh)
+        if is_graph:
+            # serverless gossip rounds: per-edge triggers, Metropolis
+            # mixing (function-level import: repro.graph consumes the
+            # engine, like repro.fleet)
+            from repro import graph as graph_lib
+            report = graph_lib.run_convex(prob, policy, server, cfg, topo,
+                                          K=self.steps, seed=self.seed,
+                                          theta0=self.theta0,
+                                          opt_loss=self.opt_loss)
+            report.algo = self.algo
+            return report
         if getattr(topo, "name", None) == "fleet":
             # cohort-sampled convex rounds over an N-client population
             # (function-level import: repro.fleet consumes the engine)
@@ -261,6 +292,17 @@ class Experiment:
             step_fn = jax.jit(fleet_lib.make_fleet_step(
                 cfg, tcfg, topo, policy=policy, server=server,
                 schedule_seed=self.seed))
+        elif getattr(topo, "name", None) == "graph":
+            # serverless gossip plane: stacked per-node params, per-edge
+            # lazy mirrors (function-level import — repro.graph consumes
+            # the engine, like repro.fleet)
+            from repro import graph as graph_lib
+            state = graph_lib.init_graph_state(
+                jax.random.PRNGKey(self.seed), cfg, tcfg, topo,
+                policy=policy, server=server)
+            step_fn = jax.jit(graph_lib.make_graph_step(
+                cfg, tcfg, topo, policy=policy, server=server,
+                schedule_seed=self.seed))
         elif getattr(topo, "name", None) == "devices":
             # real multi-device plane: shard_map workers + packed wire
             # collectives, falling back to the vmapped step on a process
@@ -310,12 +352,23 @@ class Experiment:
         if "rounds_skipped" in state["lag"]:
             extras["rounds_skipped"] = int(
                 jax.device_get(state["lag"]["rounds_skipped"]))
+        byte_tmpl = state["params"]
+        if getattr(topo, "name", None) == "graph":
+            # graph params are stacked (W, ...) per-node replicas — the
+            # wire moves ONE node's iterate per edge, so size bytes from
+            # a single slice, and expose the edge map for the pricer
+            byte_tmpl = jax.tree_util.tree_map(lambda l: l[0],
+                                               state["params"])
+            extras["edge_src"] = np.asarray(topo.spec.edge_src)
+            extras["edge_dst"] = np.asarray(topo.spec.edge_dst)
+            extras["graph_family"] = topo.family
+            extras["num_nodes"] = topo.num_nodes
         dense_bytes = float(sum(
             l.size * jnp.dtype(l.dtype).itemsize
-            for l in jax.tree_util.tree_leaves(state["params"])))
+            for l in jax.tree_util.tree_leaves(byte_tmpl)))
         return RunReport(
             algo=self.algo, losses=np.asarray(losses),
             comm_mask=np.stack(masks), opt_loss=0.0,
-            bytes_per_upload=policy.wire_bytes(state["params"]),
+            bytes_per_upload=policy.wire_bytes(byte_tmpl),
             server=server.name, topology=topo.name,
             extras=extras), dense_bytes

@@ -369,6 +369,14 @@ def _make_fleet(population=None, cohort=None, mesh=None, **kw):
                          **kw)
 
 
+def _make_graph(num_nodes=None, family=None, mesh=None, **kw):
+    """Lazy ``repro.graph`` factory (same cycle-avoidance as the fleet's):
+    the decentralized gossip plane consumes the engine round seam."""
+    from repro.graph.topology import GraphTopology
+    return GraphTopology(num_nodes=num_nodes, family=family, mesh=mesh,
+                         **kw)
+
+
 TOPOLOGIES = {
     "sim": SimWorkers,
     "shards": BatchShards,
@@ -376,6 +384,7 @@ TOPOLOGIES = {
     "async": AsyncShards,
     "devices": DeviceWorkers,
     "fleet": _make_fleet,
+    "graph": _make_graph,
 }
 
 _FLEET_GRAMMAR = ("fleet needs BOTH a population and a cohort size — "
@@ -392,8 +401,12 @@ def make_topology(spec, mesh=None) -> Topology:
     alone defaults to staleness 1), ``"devices:8"`` (one worker per
     real device via ``repro.devrun``).  The fleet topology requires both
     parts: ``"fleet:<population>@<cohort>"`` — ``"fleet:100000@64"``
-    samples a 64-client cohort per round from 10⁵ clients.  ``mesh``
-    reaches placement-aware backends (the pod axis pin).
+    samples a 64-client cohort per round from 10⁵ clients.  So does the
+    decentralized gossip plane: ``"graph:<nodes>@<family>"`` —
+    ``"graph:9@ring"``, ``"graph:12@torus:3x4"``, ``"graph:9@complete"``,
+    ``"graph:16@expander:4"``, ``"graph:16@smallworld:4@0.2"``
+    (``repro.graph``; the family may itself carry ``:``/``@`` arguments).
+    ``mesh`` reaches placement-aware backends (the pod axis pin).
     """
     if isinstance(spec, Topology):
         return spec
@@ -407,7 +420,25 @@ def make_topology(spec, mesh=None) -> Topology:
         raise ValueError(f"unknown topology {spec!r}; known: "
                          f"{tuple(TOPOLOGIES)} (optionally ':<units>', "
                          f"e.g. 'pods:2'; async also takes '@<staleness>'; "
-                         f"fleet needs 'fleet:<population>@<cohort>')")
+                         f"fleet needs 'fleet:<population>@<cohort>'; "
+                         f"graph needs 'graph:<nodes>@<family>')")
+    if name == "graph":
+        # function-level import: repro.graph.spec is numpy-only, but the
+        # package __init__ pulls in the round seam — same laziness as
+        # _make_graph.  partition("@") split at the FIRST @, so the
+        # family half may itself contain '@' ('smallworld:4@0.2').
+        from repro.graph.spec import GRAPH_GRAMMAR
+        if not sep or not sep_at:
+            raise ValueError(f"bad topology spec {spec!r}: graph needs "
+                             f"BOTH a node count and a family — "
+                             f"{GRAPH_GRAMMAR}")
+        try:
+            n = int(units)
+        except ValueError:
+            raise ValueError(
+                f"bad topology spec {spec!r}: ':{units}' is not an integer "
+                f"node count — {GRAPH_GRAMMAR}") from None
+        return TOPOLOGIES["graph"](num_nodes=n, family=stale_s, mesh=mesh)
     if name == "fleet":
         if not sep or not sep_at:
             raise ValueError(f"bad topology spec {spec!r}: "
@@ -437,8 +468,9 @@ def make_topology(spec, mesh=None) -> Topology:
     if sep_at:
         if name != "async":
             raise ValueError(
-                f"bad topology spec {spec!r}: only 'async' and 'fleet' "
-                f"take an '@' suffix (e.g. 'async:4@2', 'fleet:100000@64')")
+                f"bad topology spec {spec!r}: only 'async', 'fleet' and "
+                f"'graph' take an '@' suffix (e.g. 'async:4@2', "
+                f"'fleet:100000@64', 'graph:9@ring')")
         try:
             kwargs["staleness"] = int(stale_s)
         except ValueError:

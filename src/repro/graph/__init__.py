@@ -1,0 +1,28 @@
+"""repro.graph — decentralized LAG over gossip topologies, lazy edges.
+
+Everything else in the repo is star-shaped (server + workers); this
+plane removes the server.  ``graph:W@<family>`` builds a gossip graph
+(ring / torus / complete / expander / small-world — Metropolis
+doubly-stochastic mixing, ``repro.graph.spec``) whose round is the
+adapt-then-combine diffusion θ_i ← Σ_j W_ij ψ̂_j, where each of the E
+DIRECTED EDGES owns its own 15a-style trigger state through the
+unchanged ``CommPolicy`` seam: dense, ``laq@b`` and scheduled policies
+all compose per edge, per-edge mirrors live packed on the fastpath
+layout substrate, and a quiet edge moves zero bytes — its destination
+mixes with the last-received copy.
+
+Spec: ``Experiment(topology="graph:9@ring")`` (convex or deep);
+``netsim.price_edge_mask`` prices the (K, E) edge mask with one link
+draw per directed edge.  See docs/ARCHITECTURE.md §"the graph seam".
+"""
+from repro.graph.rounds import (EDGE_PREFIX, edge_round, init_graph_state,
+                                make_graph_step, mix, run_convex)
+from repro.graph.spec import (GRAPH_GRAMMAR, GraphSpec, build_graph,
+                              connected, metropolis_mixing)
+from repro.graph.topology import GraphTopology
+
+__all__ = [
+    "GraphTopology", "GraphSpec", "GRAPH_GRAMMAR", "build_graph",
+    "connected", "metropolis_mixing", "EDGE_PREFIX", "edge_round", "mix",
+    "init_graph_state", "make_graph_step", "run_convex",
+]

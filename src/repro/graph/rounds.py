@@ -1,0 +1,356 @@
+"""Graph rounds: adapt locally, trigger per directed edge, mix lazily.
+
+One decentralized round (deep and convex drivers share these helpers):
+
+  1. **local gradients** — every node differentiates its OWN loss at its
+     OWN iterate θ_i (no shared server θ exists);
+  2. **adapt** — ψ_i = server.apply(θ_i, opt_i, W·∇L_i(θ_i)) per node
+     (the aggregate-sum convention: servers normalize by
+     ``cfg.num_workers``, so the consensus average follows the
+     centralized recursion at the same α);
+  3. **the edge round** — ``engine.rounds.policy_rounds`` runs every
+     ``CommPolicy`` over the E directed edges at once: the quantity an
+     edge (j→i) communicates is the source's fresh ψ_j, its ``grad_hat``
+     mirror is the copy ψ̂_{j→i} the edge last moved, so the 15a-style
+     trigger fires on ‖ψ_j − ψ̂_{j→i}‖² (LAQ quantizes the innovation
+     with per-edge error feedback, schedules round-robin/sample the E
+     edges, the fastpath plan batches the whole thing — one launch for
+     all E edges).  Quiet edges keep their stale mirror: zero bytes move;
+  4. **mixing** — θ_i' = W_ii·ψ_i + Σ_e W_ij·ψ̂_e over in-edges e, i.e.
+     the doubly-stochastic diffusion step evaluated on the RECEIVED
+     copies (``jax.ops.segment_sum`` over ``edge_dst``);
+  5. **history** — the trigger RHS window advances with the MEAN squared
+     node movement (1/W)Σ_i‖θ_i' − θ_i‖², the decentralized reading of
+     the paper's ‖θ^{k+1−d} − θ^{k−d}‖² iterate lag.
+
+Per-edge mirror state lives PACKED in stacked ``(E, cols)`` float32
+arrays on the ``repro.fastpath`` layout substrate (``pack_stacked``),
+unpacked once per round — the same storage discipline as the fleet
+population.  With the ``gd`` policy on ``complete`` (uniform Metropolis
+weights = exactly 1/W) every mirror is fresh every round and the
+consensus trajectory reproduces centralized GD to float tolerance
+(golden-pinned by tests/test_graph.py).
+
+LASG-WK composes degenerately but honestly: ``grad_at_hat`` is served
+from the edge's own mirror, so its trigger coincides with LAG-WK's on
+this plane (documented here, asserted nowhere — the stochastic second
+backward pass has no per-edge meaning when the payload IS an iterate).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lag
+from repro.engine import rounds as engine_rounds
+from repro.engine.report import RunReport
+from repro.fastpath.layout import FlatLayout
+from repro.graph.topology import GraphTopology
+
+Pytree = Any
+
+#: lag-group key prefix for the packed per-edge mirror arrays
+EDGE_PREFIX = "edge_"
+
+
+def _check_policy(policy):
+    if "grad_hat" not in policy.state_keys:
+        raise ValueError(
+            f"the graph plane stores each edge's last-transmitted iterate "
+            f"in the policy's 'grad_hat' mirror; policy {policy.name!r} "
+            f"has state_keys={policy.state_keys}")
+
+
+def _edge_arrays(spec, dtype):
+    """jnp views of the spec's edge structure (trace-time constants)."""
+    return (jnp.asarray(spec.edge_src, jnp.int32),
+            jnp.asarray(spec.edge_dst, jnp.int32),
+            jnp.asarray(spec.edge_weights, dtype),
+            jnp.asarray(spec.self_weights, dtype))
+
+
+def _adapt(server, thetas, opts, grads, step, nodecfg, num_nodes):
+    """Vmapped per-node server step on the W-scaled local gradient."""
+    nabla = jax.tree_util.tree_map(lambda g: g * num_nodes, grads)
+    if opts is None:
+        psi = jax.vmap(
+            lambda t, g: server.apply(t, None, g, step, nodecfg)[0])(
+            thetas, nabla)
+        return psi, None
+    return jax.vmap(
+        lambda t, o, g: server.apply(t, o, g, step, nodecfg))(
+        thetas, opts, nabla)
+
+
+def edge_round(policy, ecfg: lag.LAGConfig, psi: Pytree, lag_state: Dict,
+               layout: FlatLayout, template: Pytree, *,
+               edge_src: jnp.ndarray, L_edge: jnp.ndarray,
+               step: jnp.ndarray, key: Optional[jnp.ndarray]
+               ) -> Tuple[jnp.ndarray, Dict]:
+    """Steps 3 of the round: per-edge trigger/encode/decode over all E
+    directed edges in one ``policy_rounds`` call.
+
+    Returns ``(comm (E,) bool, new_pst)`` where ``new_pst`` holds the
+    advanced per-edge mirrors as stacked (E, …) pytrees —
+    ``new_pst["grad_hat"]`` is the post-round received copy ψ̂_e the
+    mixing step consumes (stale wherever ``comm`` is False).
+    """
+    psi_src = jax.tree_util.tree_map(lambda l: l[edge_src], psi)
+    edge_lag = {sk: layout.unpack_stacked(lag_state[EDGE_PREFIX + sk],
+                                          like=template)
+                for sk in policy.state_keys}
+    gah = edge_lag["grad_hat"] if policy.needs_grad_at_hat else None
+    edge_lag["hist"] = lag_state["hist"]
+    edge_lag["L_m"] = L_edge
+    comm, _delta, new_pst = engine_rounds.policy_rounds(
+        policy, ecfg, psi_src, psi_src, edge_lag, gah,
+        step=step, key=key, theta_view=psi_src)
+    return comm, new_pst
+
+
+def mix(psi: Pytree, mirrors: Pytree, self_w: jnp.ndarray,
+        edge_w: jnp.ndarray, edge_dst: jnp.ndarray,
+        num_nodes: int) -> Pytree:
+    """Step 4: θ_i' = W_ii·ψ_i + Σ_{e: dst(e)=i} W_i,src(e)·ψ̂_e."""
+    def one(p, mhat):
+        own = p * self_w.reshape((num_nodes,) + (1,) * (p.ndim - 1))
+        w = edge_w.reshape((edge_w.shape[0],) + (1,) * (mhat.ndim - 1))
+        recv = jax.ops.segment_sum((mhat * w.astype(mhat.dtype)), edge_dst,
+                                   num_segments=num_nodes)
+        return own + recv.astype(p.dtype)
+    return jax.tree_util.tree_map(one, psi, mirrors)
+
+
+def _pack_mirrors(layout: FlatLayout, pst: Dict) -> Dict:
+    return {EDGE_PREFIX + k: layout.pack_stacked(v) for k, v in pst.items()}
+
+
+def _init_edge_state(policy, layout: FlatLayout, template: Pytree,
+                     num_edges: int, D: int) -> Dict:
+    """Fresh lag group: every edge's mirror starts at θ⁰ (every node
+    knows the shared init), so round 0's innovation is the first adapt
+    step and the dense policies naturally all-upload — the decentralized
+    reading of Alg. 1 line 2."""
+    theta0_edges = jax.tree_util.tree_map(
+        lambda l: jnp.broadcast_to(l, (num_edges,) + l.shape), template)
+    pst0 = policy.init_state(
+        theta0_edges, theta0_edges if policy.needs_theta_hat else None)
+    lag_state = _pack_mirrors(layout, pst0)
+    lag_state.update(
+        hist=lag.hist_init(D),
+        comm_total=jnp.zeros((), jnp.int32),
+        comm_per_worker=jnp.zeros((num_edges,), jnp.int32),
+    )
+    return lag_state
+
+
+# ---------------------------------------------------------------------------
+# Convex driver (the SimWorkers.run shape, decentralized)
+# ---------------------------------------------------------------------------
+
+def run_convex(problem, policy, server, lagcfg: lag.LAGConfig,
+               topology: GraphTopology, *, K: int, seed: int = 0,
+               theta0=None, opt_loss: Optional[float] = None) -> RunReport:
+    """Decentralized convex run: node i owns worker i's data shard and
+    its own iterate; K diffusion rounds in one ``lax.scan``.
+
+    The reported loss trajectory is the global objective at the
+    CONSENSUS AVERAGE θ̄^k = (1/W)Σ_i θ_i^k (evaluated in one vectorized
+    pass after the scan); ``comm_mask`` is (K, E) over directed edges.
+    """
+    _check_policy(policy)
+    spec = topology.spec
+    W, E = spec.num_nodes, spec.num_edges
+    if problem.num_workers != W:
+        raise ValueError(
+            f"graph has {W} nodes but the problem has "
+            f"{problem.num_workers} workers — node i holds worker i's "
+            f"shard, so the counts must match")
+    d = problem.dim
+    theta0 = jnp.zeros((d,), problem.X.dtype) if theta0 is None else theta0
+    edge_src, edge_dst, edge_w, self_w = _edge_arrays(spec, theta0.dtype)
+    layout = FlatLayout.for_tree(theta0)
+    # the lazy units of the EDGE round are the E directed edges: the
+    # trigger RHS normalizes by E and schedules cycle/sample edge slots
+    ecfg = dataclasses.replace(lagcfg, num_workers=E)
+    L_edge = jnp.asarray(problem.L_m)[edge_src]
+
+    lag_state = _init_edge_state(policy, layout, theta0, E, lagcfg.D)
+    carry0 = dict(
+        thetas=jnp.tile(theta0[None], (W, 1)),
+        opt=None,
+        lag=lag_state,
+        key=jax.random.PRNGKey(seed),
+        k=jnp.zeros((), jnp.int32),
+    )
+    opt0 = server.init(theta0)
+    has_opt = opt0 is not None
+    if has_opt:
+        carry0["opt"] = jax.tree_util.tree_map(
+            lambda l: jnp.broadcast_to(l, (W,) + l.shape) + 0, opt0)
+
+    def step(carry, _):
+        thetas = carry["thetas"]
+        theta_bar = jnp.mean(thetas, axis=0)
+        grads = problem.worker_grads_at(thetas)               # (W, d)
+        psi, new_opt = _adapt(server, thetas, carry["opt"] if has_opt
+                              else None, grads, carry["k"], lagcfg, W)
+        if policy.needs_rng:
+            key, sub = jax.random.split(carry["key"])
+        else:
+            key, sub = carry["key"], None
+        comm, new_pst = edge_round(
+            policy, ecfg, psi, carry["lag"], layout, theta0,
+            edge_src=edge_src, L_edge=L_edge, step=carry["k"], key=sub)
+        new_thetas = mix(psi, new_pst["grad_hat"], self_w, edge_w,
+                         edge_dst, W)
+        hist_new = lag.hist_push(
+            carry["lag"]["hist"],
+            jnp.sum((new_thetas - thetas) ** 2) / W)
+        _, counters = engine_rounds.comm_counter_updates(carry["lag"], comm)
+        new_lag = dict(carry["lag"], hist=hist_new, **counters,
+                       **_pack_mirrors(layout, new_pst))
+        new_carry = dict(thetas=new_thetas, opt=new_opt, lag=new_lag,
+                         key=key, k=carry["k"] + 1)
+        out = (theta_bar, comm,
+               lag.rhs_underflow(carry["lag"]["hist"], ecfg, carry["k"]))
+        return new_carry, out
+
+    final, (theta_bars, comm_mask, underflow) = jax.jit(
+        lambda c: jax.lax.scan(step, c, None, length=K))(carry0)
+    # diagnostics AFTER the scan: one vectorized pass of the global
+    # objective over the recorded consensus averages
+    losses = jax.lax.map(
+        lambda t: server.composite_loss(problem.loss(t), t), theta_bars)
+    if opt_loss is None:
+        _, opt_loss = problem.optimum()
+    thetas_K = final["thetas"]
+    consensus = jnp.sum((thetas_K - jnp.mean(thetas_K, axis=0)) ** 2) / W
+    from repro.netsim import hetero as netsim_hetero
+    extras = {
+        "trigger_rhs_underflow_rounds": int(np.asarray(underflow).sum()),
+        "L_m_spread": netsim_hetero.realized_spread(problem.L_m),
+        "hetero_score": netsim_hetero.hetero_score(
+            problem.L_m, alpha=lagcfg.alpha, xi=lagcfg.xi, D=lagcfg.D,
+            num_workers=W),
+        "graph_family": spec.family,
+        "num_nodes": W, "num_edges": E,
+        "spectral_gap": spec.spectral_gap,
+        "edge_src": spec.edge_src,          # (E,) — netsim edge pricing
+        "edge_dst": spec.edge_dst,          # (E,)
+        "consensus_final": float(consensus),
+    }
+    return RunReport(
+        algo=policy.name, losses=np.asarray(losses),
+        comm_mask=np.asarray(comm_mask), opt_loss=float(opt_loss),
+        bytes_per_upload=policy.wire_bytes(theta0),
+        server=server.name, topology=topology.name, extras=extras)
+
+
+# ---------------------------------------------------------------------------
+# Deep driver (the repro.dist trainer shape: init_state + make_step)
+# ---------------------------------------------------------------------------
+
+def init_graph_state(key, cfg, tcfg, topology: GraphTopology, policy=None,
+                     server=None) -> Dict:
+    """Fresh graph trainer state: ``params`` is the STACKED (W, …) pytree
+    of per-node iterates (all equal at init), the lag group holds the
+    packed (E, cols) per-edge mirrors, and ``comm_per_worker`` is
+    per-EDGE, shape (E,)."""
+    from repro.models import model
+    policy = policy if policy is not None else tcfg.comm_policy()
+    server = server if server is not None else tcfg.server_optimizer()
+    _check_policy(policy)
+    W, E = topology.num_nodes, topology.num_edges
+    params0 = model.init(key, cfg)
+    layout = FlatLayout.for_tree(params0)
+    thetas = jax.tree_util.tree_map(
+        lambda l: jnp.broadcast_to(l, (W,) + l.shape) + 0, params0)
+    lag_state = _init_edge_state(policy, layout, params0, E, tcfg.D)
+    state = {"params": thetas, "lag": lag_state,
+             "step": jnp.zeros((), jnp.int32)}
+    opt0 = server.init(params0)
+    if opt0 is not None:
+        state["opt"] = jax.tree_util.tree_map(
+            lambda l: jnp.broadcast_to(l, (W,) + l.shape) + 0, opt0)
+    return state
+
+
+def make_graph_step(cfg, tcfg, topology: GraphTopology, policy=None,
+                    server=None, schedule_seed: int = 0):
+    """Build the jit-friendly ``(state, batch) → (state, metrics)``
+    decentralized step.  The batch splits across the W nodes (node i
+    trains on shard i at its OWN iterate); the per-edge round and the
+    mixing step follow the module docstring.  ``lagcfg`` keeps the
+    trainer's α = lr/W convention, so the per-node adapt of the W-scaled
+    gradient moves each node by lr·∇L_i."""
+    from repro.models import model
+    policy = policy if policy is not None else tcfg.comm_policy()
+    server = server if server is not None else tcfg.server_optimizer()
+    _check_policy(policy)
+    spec = topology.spec
+    W, E = spec.num_nodes, spec.num_edges
+    nodecfg = tcfg.lag_config(num_units=W)
+    ecfg = dataclasses.replace(nodecfg, num_workers=E)
+    edge_src, edge_dst, edge_w, self_w = _edge_arrays(spec, jnp.float32)
+
+    def graph_step(state: Dict, batch: Dict) -> Tuple[Dict, Dict]:
+        thetas, lag_state = state["params"], state["lag"]
+        template = jax.tree_util.tree_map(lambda l: l[0], thetas)
+        layout = FlatLayout.for_tree(template)
+        root = jax.random.fold_in(jax.random.PRNGKey(schedule_seed),
+                                  state["step"])
+        kpol = root if policy.needs_rng else None
+
+        shards = topology.place_batch(batch, W)
+        losses, grads = jax.vmap(
+            lambda p, b: jax.value_and_grad(
+                lambda pp: model.loss_fn(pp, cfg, b))(p))(thetas, shards)
+        theta_bar = jax.tree_util.tree_map(
+            lambda l: jnp.mean(l, axis=0), thetas)
+        loss = server.composite_loss(jnp.mean(losses), theta_bar)
+
+        psi, new_opt = _adapt(server, thetas, state.get("opt"), grads,
+                              state["step"], nodecfg, W)
+        # deep runs have no oracle L_m: the sync trainer's 1/α heuristic
+        L_edge = jnp.full((E,), 1.0 / tcfg.lr, jnp.float32)
+        comm, new_pst = edge_round(
+            policy, ecfg, psi, lag_state, layout, template,
+            edge_src=edge_src, L_edge=L_edge, step=state["step"], key=kpol)
+        new_thetas = mix(psi, new_pst["grad_hat"], self_w, edge_w,
+                         edge_dst, W)
+
+        hist_new = lag.hist_push(
+            lag_state["hist"],
+            lag.tree_sqnorm(lag.tree_sub(new_thetas, thetas)) / W)
+        comm_i, counters = engine_rounds.comm_counter_updates(lag_state,
+                                                             comm)
+        new_lag = dict(lag_state, hist=hist_new, **counters,
+                       **_pack_mirrors(layout, new_pst))
+        new_state = dict(state, params=new_thetas, lag=new_lag,
+                         step=state["step"] + 1)
+        if new_opt is not None:
+            new_state["opt"] = new_opt
+
+        bytes_per_upload = policy.wire_bytes(template)
+        metrics = {
+            "loss": loss,
+            "comm_mask": comm,                      # (E,) per directed edge
+            "comm_this_round": jnp.sum(comm_i),
+            "comm_total": new_lag["comm_total"],
+            "wire_bytes_this_round":
+                jnp.sum(comm_i).astype(jnp.float32) * bytes_per_upload,
+            "wire_bytes_total":
+                new_lag["comm_total"].astype(jnp.float32) * bytes_per_upload,
+            "trigger_rhs": lag.trigger_rhs(lag_state["hist"], ecfg),
+            "trigger_rhs_underflow":
+                lag.rhs_underflow(lag_state["hist"], ecfg, state["step"]),
+            "skipped_round": (~jnp.any(comm)).astype(jnp.int32),
+        }
+        return new_state, metrics
+
+    return graph_step

@@ -12,11 +12,16 @@ through the event-driven network cost model (``repro.netsim.cluster``)
 and prints simulated wall-clock vs the GD baseline at exit.
 
 ``--topology`` selects the placement backend (``repro.engine.topology``
-specs): ``pods:2``, ``async:4@2``, or the sampled-cohort federated
-fleet ``fleet:100000@64`` (``repro.fleet`` — per-round k-client cohorts
-from an N-client population; ``--fleet-churn`` / ``--fleet-selection``
-dial dropout and lazy server-side client selection, and ``--cluster``
-prices the cohort uploads per-client via ``price_cohort_mask``).
+specs): ``shards`` (the default flat vmap), ``pods:2``, ``async:4@2``,
+``devices:8`` (one worker per real device, ``repro.devrun``), the
+sampled-cohort federated fleet ``fleet:100000@64`` (``repro.fleet`` —
+per-round k-client cohorts from an N-client population; ``--fleet-churn``
+/ ``--fleet-selection`` dial dropout and lazy server-side client
+selection, and ``--cluster`` prices the cohort uploads per-client via
+``price_cohort_mask``), or the serverless gossip graph ``graph:9@ring``
+(``repro.graph`` — per-edge lazy triggers + Metropolis mixing;
+``--cluster`` is sized to the E directed edges and priced via
+``price_edge_mask``).
 """
 from __future__ import annotations
 
@@ -50,10 +55,14 @@ def build_argparser():
     p.add_argument("--topology", default=None,
                    help="repro.engine topology spec (e.g. 'shards', "
                         "'pods:2', 'async:4@2', 'devices:8', "
-                        "'fleet:100000@64'); default: flat batch shards.  "
-                        "devices:D pins one worker per real device "
-                        "(repro.devrun); fleet:N@k samples a k-client "
-                        "cohort per round from N virtual clients")
+                        "'fleet:100000@64', 'graph:9@ring'); default: flat "
+                        "batch shards.  devices:D pins one worker per real "
+                        "device (repro.devrun); fleet:N@k samples a "
+                        "k-client cohort per round from N virtual clients; "
+                        "graph:W@<family> is the serverless gossip plane "
+                        "(repro.graph — families ring, torus:RxC, "
+                        "complete, expander:d, smallworld:k@p; lazy "
+                        "triggers per directed edge)")
     p.add_argument("--fleet-churn", type=float, default=0.0,
                    help="fleet only: per-round client leave probability "
                         "(clients re-join with stale state)")
@@ -118,15 +127,19 @@ def main(argv=None):
         topo = FleetTopology(population=topo.population, cohort=topo.cohort,
                              mesh=mesh, churn=args.fleet_churn,
                              selection=args.fleet_selection)
-    # W = lazy-unit count the batch is split over: the cohort size for
-    # fleet, the topology's unit count otherwise (--workers by default).
+    graph = getattr(topo, "name", None) == "graph"
+    # W = batch-shard count: the cohort size for fleet, the node count
+    # for graph, the topology's unit count otherwise (--workers default).
     W = topo.units(args.workers) if topo is not None else args.workers
+    # uploads = lazy-unit count per round: the E directed EDGES on a
+    # graph (per-edge triggers), W everywhere else
+    units = topo.num_edges if graph else W
     if args.cluster is not None:
         from repro.netsim import make_cluster
-        # fleet runs price per-CLIENT links, so the cluster is
-        # population-sized; everything else prices per-worker
+        # fleet runs price per-CLIENT links (population-sized cluster),
+        # graph runs per directed EDGE; everything else per-worker
         make_cluster(args.cluster,
-                     num_workers=topo.population if fleet else W)
+                     num_workers=topo.population if fleet else units)
 
     devices = getattr(topo, "name", None) == "devices"
     if fleet:
@@ -143,6 +156,15 @@ def main(argv=None):
         state = devrun.init_device_state(jax.random.PRNGKey(args.seed),
                                          cfg, tcfg, topology=topo)
         train_step = devrun.make_device_step(cfg, tcfg, topology=topo)
+    elif graph:
+        # serverless gossip: stacked per-node params + packed per-edge
+        # mirrors own their layout, so the generic host-mesh sharding
+        # pass below is skipped (like devices)
+        from repro import graph as graph_lib
+        state = graph_lib.init_graph_state(jax.random.PRNGKey(args.seed),
+                                           cfg, tcfg, topo)
+        train_step = graph_lib.make_graph_step(cfg, tcfg, topo,
+                                               schedule_seed=args.seed)
     else:
         state = init_state(jax.random.PRNGKey(args.seed), cfg, tcfg,
                            topology=topo)
@@ -152,7 +174,7 @@ def main(argv=None):
         state, start = restore(args.ckpt_dir, state)
         print(f"resumed from step {start}")
     with mesh_context(mesh):
-        if not devices:
+        if not (devices or graph):
             state_sh = tree_shardings(state, mesh)
             state = jax.device_put(state, state_sh)
         step_fn = jax.jit(train_step, donate_argnums=(0,))
@@ -188,18 +210,25 @@ def main(argv=None):
         dt = time.time() - t0
         total = int(jax.device_get(state["lag"]["comm_total"]))
         rounds = args.steps - start
-        # GD baseline: every unit uploads every round — for fleet that is
-        # the whole COHORT (the round only ever polls k of N clients)
+        # GD baseline: every lazy unit uploads every round — the whole
+        # COHORT for fleet (the round only polls k of N clients), every
+        # directed EDGE for graph, every worker otherwise
         print(f"done: {rounds} rounds in {dt:.1f}s | uploads {total} "
-              f"vs GD {rounds * W} "
-              f"({100.0 * total / max(rounds * W, 1):.1f}% of GD)")
+              f"vs GD {rounds * units} "
+              f"({100.0 * total / max(rounds * units, 1):.1f}% of GD)")
         if args.cluster is not None and (masks or cohorts):
             from repro.netsim import (make_cluster, price_cohort_mask,
-                                      price_mask)
-            bpu = tcfg.comm_policy().wire_bytes(state["params"])
+                                      price_edge_mask, price_mask)
+            byte_tmpl = state["params"]
+            if graph:
+                # stacked (W, ...) per-node replicas: one node's iterate
+                # moves per edge, so size bytes from a single slice
+                byte_tmpl = jax.tree_util.tree_map(lambda l: l[0],
+                                                   state["params"])
+            bpu = tcfg.comm_policy().wire_bytes(byte_tmpl)
             dense = float(sum(
                 l.size * jnp.dtype(l.dtype).itemsize
-                for l in jax.tree_util.tree_leaves(state["params"])))
+                for l in jax.tree_util.tree_leaves(byte_tmpl)))
             if fleet:
                 cl = make_cluster(args.cluster, num_workers=topo.population)
                 ids = np.stack(cohorts)
@@ -208,6 +237,14 @@ def main(argv=None):
                                           dense_bytes=dense).sum()
                 t_gd = price_cohort_mask(ids, np.ones_like(cm), dense, cl,
                                          dense_bytes=dense).sum()
+            elif graph:
+                cl = make_cluster(args.cluster, num_workers=units)
+                dst = np.asarray(topo.spec.edge_dst)
+                t_run = price_edge_mask(np.stack(masks), bpu, cl, dst,
+                                        dense_bytes=dense).sum()
+                t_gd = price_edge_mask(np.ones((rounds, units), bool),
+                                       dense, cl, dst,
+                                       dense_bytes=dense).sum()
             else:
                 cl = make_cluster(args.cluster, num_workers=W)
                 t_run = price_mask(np.stack(masks), bpu, cl,

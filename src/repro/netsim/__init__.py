@@ -33,7 +33,8 @@ reproduces the paper's savings-grow-with-heterogeneity trend is
 walkthrough is docs/ARCHITECTURE.md.
 """
 from repro.netsim.cluster import (CLUSTERS, Cluster, Link, make_cluster,
-                                  price_cohort_mask, price_fleet_report,
+                                  price_cohort_mask, price_edge_mask,
+                                  price_edge_report, price_fleet_report,
                                   price_mask, price_report)
 from repro.netsim.hetero import (hetero_L_targets, hetero_inputs,
                                  hetero_problem, hetero_score,
@@ -42,6 +43,7 @@ from repro.netsim.hetero import (hetero_L_targets, hetero_inputs,
 __all__ = [
     "Cluster", "Link", "CLUSTERS", "make_cluster", "price_mask",
     "price_report", "price_cohort_mask", "price_fleet_report",
+    "price_edge_mask", "price_edge_report",
     "hetero_problem", "hetero_L_targets", "hetero_inputs", "hetero_score",
     "realized_spread", "shard_noise_levels",
 ]

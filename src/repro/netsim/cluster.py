@@ -284,6 +284,62 @@ def price_mask(comm_mask, bytes_per_upload: float, cluster: Cluster,
     return ready + bcast
 
 
+def price_edge_mask(comm_mask, bytes_per_upload: float, cluster: Cluster,
+                    edge_dst, dense_bytes: Optional[float] = None
+                    ) -> np.ndarray:
+    """(K, E) per-EDGE upload mask → (K,) simulated seconds per round.
+
+    The decentralized pricer: there is no server, so each directed edge e
+    gets its own link draw (``cluster`` is sized to E, one profile row
+    per edge) and payloads serialize on the DESTINATION node's ingress
+    NIC — ``edge_dst[e]`` names the node edge e drains into.  The round
+    ends when the slowest node has drained its in-edges and re-broadcast
+    its iterate (``dense_bytes`` sizes that dense push, exactly as in
+    :func:`price_mask`).  Quiet edges are free control messages that
+    still gate the barrier.  When every edge shares one destination (the
+    star graph) each round is a single-queue drain in arrival order —
+    identical arithmetic to :func:`price_mask`, bit-for-bit (pinned by
+    tests/test_graph.py).
+    """
+    mask = np.asarray(comm_mask, bool)
+    if mask.ndim != 2:
+        raise ValueError(f"comm_mask must be (rounds, edges), got shape "
+                         f"{mask.shape}")
+    K, E = mask.shape
+    if E != cluster.num_workers:
+        raise ValueError(f"mask has {E} edges but cluster "
+                         f"{cluster.name!r} has {cluster.num_workers} "
+                         f"link rows — size the cluster to the DIRECTED "
+                         f"edge count")
+    dst = np.asarray(edge_dst, np.int64)
+    if dst.shape != (E,):
+        raise ValueError(f"edge_dst must be ({E},) to match the mask's "
+                         f"edge axis, got shape {dst.shape}")
+    n_nodes = int(dst.max()) + 1 if E else 1
+    finish = cluster.compute_s[None, :] * cluster.compute_jitter(K)
+    arrive = finish + cluster.up_latency_s[None, :]
+    rate = np.minimum(cluster.up_bw_Bps, cluster.server_bw_Bps)
+    xfer = float(bytes_per_upload) / rate                       # (E,)
+
+    order = np.argsort(arrive, axis=1, kind="stable")
+    rows = np.arange(K)
+    busy = np.zeros((K, n_nodes))   # when each node's ingress NIC frees up
+    ready = np.zeros(K)             # when the last decision/payload is in
+    for j in range(E):
+        e = order[:, j]
+        a = arrive[rows, e]
+        up = mask[rows, e]
+        node = dst[e]
+        b = busy[rows, node]
+        start = np.maximum(b, a)
+        done = start + xfer[e]
+        busy[rows, node] = np.where(up, done, b)
+        ready = np.maximum(ready, np.where(up, done, a))
+    bcast = cluster.bcast.transfer_seconds(
+        bytes_per_upload if dense_bytes is None else dense_bytes)
+    return ready + bcast
+
+
 def price_cohort_mask(cohort_ids, cohort_mask, bytes_per_upload: float,
                       cluster: Cluster,
                       dense_bytes: Optional[float] = None) -> np.ndarray:
@@ -359,6 +415,31 @@ def price_fleet_report(report, cluster,
     report.round_seconds = price_cohort_mask(
         extras["cohort_ids"], extras["cohort_comm"],
         report.bytes_per_upload, cl, dense_bytes=dense_bytes)
+    report.extras["cluster"] = cl.name
+    report.extras["wall_seconds"] = float(report.round_seconds.sum())
+    return report
+
+
+def price_edge_report(report, cluster,
+                      dense_bytes: Optional[float] = None):
+    """Price a graph ``RunReport`` in place (and return it).
+
+    Reads the edge map the graph drivers record in ``report.extras``
+    (``edge_dst``) and fills ``round_seconds`` via
+    :func:`price_edge_mask`; the cluster is sized to the DIRECTED edge
+    count E = ``report.comm_mask.shape[1]`` — one link draw per edge.
+    """
+    extras = report.extras
+    if "edge_dst" not in extras:
+        raise ValueError(
+            "price_edge_report needs extras['edge_dst'] — the per-edge "
+            "destination map a graph run records; for star-shaped masks "
+            "use price_report")
+    E = int(np.asarray(report.comm_mask).shape[1])
+    cl = make_cluster(cluster, num_workers=E)
+    report.round_seconds = price_edge_mask(
+        np.asarray(report.comm_mask), report.bytes_per_upload, cl,
+        extras["edge_dst"], dense_bytes=dense_bytes)
     report.extras["cluster"] = cl.name
     report.extras["wall_seconds"] = float(report.round_seconds.sum())
     return report

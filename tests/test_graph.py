@@ -1,0 +1,258 @@
+"""``repro.graph`` — the decentralized gossip plane.
+
+Four pinned claims:
+  1. every family's Metropolis mixing matrix is doubly stochastic,
+     symmetric, connected, aperiodic (positive diagonal) and has a
+     positive spectral gap — the convergence preconditions of the
+     diffusion recursion, per spec;
+  2. ``gd`` on ``graph:W@complete`` (uniform weights = exactly 1/W)
+     reproduces centralized GD at the same α to float tolerance — the
+     golden anchor tying the serverless plane to the paper's eq. (4);
+  3. an all-quiet round moves ZERO payload bytes on every family
+     (netsim-priced: the round costs exactly the free-control-message
+     drain), and lazy gossip beats always-on gossip on wire bytes;
+  4. ``price_edge_mask`` reduces BIT-EXACTLY to ``price_mask`` when
+     every directed edge shares one destination (the star graph).
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import convex
+from repro.engine import Experiment
+from repro.graph import build_graph, connected, metropolis_mixing
+from repro.netsim import make_cluster, price_edge_mask, price_mask
+
+W = 9
+FAMILIES = ("ring", "torus:3x3", "complete", "expander:4",
+            "smallworld:4@0.2")
+
+
+@pytest.fixture(scope="module")
+def prob9():
+    return convex.synthetic("linreg", num_workers=W, n_per=20, d=10, seed=0)
+
+
+def _quiet_problem():
+    """Zero data ⇒ every gradient is identically 0 ⇒ every adapt step is
+    the identity ⇒ every edge innovation is 0 ⇒ the strict trigger never
+    fires: ALL rounds are all-quiet."""
+    d = 4
+    return convex.Problem(
+        name="quiet", kind="linreg",
+        X=jnp.zeros((W, 2, d)), y=jnp.zeros((W, 2)),
+        L_m=jnp.ones((W,)), L=1.0)
+
+
+# ---------------------------------------------------------------------------
+# 1. Mixing-matrix properties, per family
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_mixing_is_doubly_stochastic_symmetric_connected(family):
+    spec = build_graph(W, family, seed=0)
+    Wm = spec.mixing
+    np.testing.assert_allclose(Wm.sum(axis=0), np.ones(W), atol=1e-12)
+    np.testing.assert_allclose(Wm.sum(axis=1), np.ones(W), atol=1e-12)
+    np.testing.assert_allclose(Wm, Wm.T, atol=0)
+    assert (Wm >= 0).all()
+    # strictly positive diagonal ⇒ aperiodic chain
+    assert (np.diag(Wm) > 0).all()
+    assert connected(spec.adj)
+    assert spec.spectral_gap > 0.0
+    # adjacency has no self-loops and edge arrays are consistent
+    assert not np.diag(spec.adj).any()
+    assert spec.num_edges == int(spec.adj.sum())
+    assert spec.edge_src.shape == spec.edge_dst.shape \
+        == (spec.num_edges,)
+    assert (spec.edge_weights > 0).all()
+
+
+@pytest.mark.parametrize("family", ("expander:4", "smallworld:4@0.2"))
+def test_stochastic_families_are_seed_deterministic(family):
+    a = build_graph(W, family, seed=3)
+    b = build_graph(W, family, seed=3)
+    c = build_graph(W, family, seed=4)
+    np.testing.assert_array_equal(a.adj, b.adj)
+    # different seed ⇒ (almost surely) a different wiring
+    assert not np.array_equal(a.adj, c.adj)
+
+
+def test_complete_mixing_is_exactly_uniform():
+    spec = build_graph(W, "complete")
+    # off-diagonal weights are BIT-exactly 1/(1+max(deg,deg)) = 1/W; the
+    # diagonal is 1 − Σ(eight 1/9s), one accumulated-rounding ulp away
+    off = ~np.eye(W, dtype=bool)
+    np.testing.assert_array_equal(spec.mixing[off], 1.0 / W)
+    np.testing.assert_allclose(np.diag(spec.mixing), 1.0 / W, atol=1e-15)
+
+
+def test_metropolis_mixing_on_a_path_matches_hand_values():
+    # path 0—1—2: degrees (1, 2, 1); W_01 = W_12 = 1/3; diag fills rows
+    adj = np.array([[0, 1, 0], [1, 0, 1], [0, 1, 0]], bool)
+    Wm = metropolis_mixing(adj)
+    np.testing.assert_allclose(
+        Wm, [[2 / 3, 1 / 3, 0], [1 / 3, 1 / 3, 1 / 3], [0, 1 / 3, 2 / 3]])
+
+
+# ---------------------------------------------------------------------------
+# 2. Golden anchor: complete-graph gd ≡ centralized GD
+# ---------------------------------------------------------------------------
+
+def test_complete_graph_gd_reproduces_centralized_gd(prob9):
+    """Uniform mixing makes every node's iterate the centralized one, so
+    the consensus trajectory IS eq. (4)'s.  Same explicit α on both runs;
+    the only daylight is float reassociation in the (1/W)Σ average —
+    rtol 1e-4 documents that, the observed gap is ~1e-6."""
+    a = 1.0 / (W * float(np.max(prob9.L_m)))
+    rg = Experiment(problem=prob9, algo="gd", steps=60,
+                    topology=f"graph:{W}@complete", alpha=a).run()
+    rc = Experiment(problem=prob9, algo="gd", steps=60, alpha=a).run()
+    np.testing.assert_allclose(rg.losses, rc.losses, rtol=1e-4)
+    # dense policy on a graph: every directed edge fires every round
+    assert rg.comm_mask.all()
+    assert rg.comm_mask.shape == (60, rg.extras["num_edges"])
+
+
+# ---------------------------------------------------------------------------
+# 3. Laziness: all-quiet rounds are free, lazy gossip saves bytes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_all_quiet_rounds_move_zero_bytes(family):
+    """Zero innovation ⇒ zero uploads on EVERY family, and the priced
+    round costs exactly the all-quiet drain (control messages gate the
+    barrier; no payload transfer ever starts)."""
+    K = 12
+    r = Experiment(problem=_quiet_problem(), algo="lag-wk", steps=K,
+                   topology=f"graph:{W}@{family}", opt_loss=0.0).run()
+    E = r.extras["num_edges"]
+    assert r.comm_mask.shape == (K, E)
+    assert int(r.comm_mask.sum()) == 0
+    assert float(r.cum_wire_bytes[-1]) == 0.0
+    cl = make_cluster(f"hetero:{E}@10ms/1Gbps")
+    priced = price_edge_mask(r.comm_mask, r.bytes_per_upload, cl,
+                             r.extras["edge_dst"])
+    quiet = price_edge_mask(np.zeros((K, E), bool), r.bytes_per_upload,
+                            cl, r.extras["edge_dst"])
+    busy = price_edge_mask(np.ones((K, E), bool), r.bytes_per_upload,
+                           cl, r.extras["edge_dst"])
+    np.testing.assert_array_equal(priced, quiet)
+    assert (priced < busy).all()
+
+
+def test_lag_wk_on_ring_converges_and_saves_uploads(prob9):
+    gd = Experiment(problem=prob9, algo="gd", steps=400,
+                    topology=f"graph:{W}@ring").run()
+    lw = Experiment(problem=prob9, algo="lag-wk", steps=400,
+                    topology=f"graph:{W}@ring").run()
+    assert np.isfinite(lw.losses).all()
+    # both converge to the same neighborhood...
+    assert lw.losses[-1] < 1.5 * max(gd.losses[-1], 1e-3) + 1e-3
+    assert lw.losses[-1] < 0.01 * lw.losses[0]
+    # ...and the lazy triggers fire on a small fraction of edge-rounds
+    assert lw.comm_mask.sum() < 0.2 * gd.comm_mask.sum()
+    # nodes actually agree (consensus residual shrank with the loss)
+    assert lw.extras["consensus_final"] < 1e-1
+
+
+def test_laq_composes_per_edge(prob9):
+    lw = Experiment(problem=prob9, algo="lag-wk", steps=200,
+                    topology=f"graph:{W}@ring").run()
+    lq = Experiment(problem=prob9, algo="laq@4", steps=200,
+                    topology=f"graph:{W}@ring").run()
+    assert np.isfinite(lq.losses).all()
+    assert lq.losses[-1] < 0.05 * lq.losses[0]
+    # 4-bit edge payloads are strictly narrower than dense float32
+    assert lq.bytes_per_upload < lw.bytes_per_upload
+
+
+def test_cyclic_schedule_runs_over_edge_slots(prob9):
+    """cyc-IAG on a graph round-robins the E directed EDGES: exactly one
+    edge fires per round."""
+    r = Experiment(problem=prob9, algo="cyc-iag", steps=30,
+                   topology=f"graph:{W}@ring").run()
+    assert (r.comms_per_iter == 1).all()
+    # over E rounds the cycle visits every edge once
+    E = r.extras["num_edges"]
+    assert (r.comm_mask[:E].sum(axis=0) == 1).all()
+
+
+def test_graph_validates_node_count_against_problem(prob9):
+    with pytest.raises(ValueError, match="node i holds worker i's shard"):
+        Experiment(problem=prob9, algo="gd", steps=2,
+                   topology="graph:4@ring").run()
+
+
+# ---------------------------------------------------------------------------
+# 4. The edge pricer: star reduction + multi-queue sanity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("profile", ("hetero", "straggler"))
+def test_price_edge_mask_reduces_to_price_mask_on_star(profile):
+    """Every directed edge draining into node 0 IS the single-server
+    queue: identical arithmetic, bit-for-bit equal output."""
+    E, K = 7, 11
+    cl = make_cluster(f"{profile}:{E}@10ms/1Gbps")
+    rng = np.random.default_rng(0)
+    mask = rng.random((K, E)) < 0.6
+    star = np.zeros(E, np.int64)
+    got = price_edge_mask(mask, 512.0, cl, star, dense_bytes=4096.0)
+    want = price_mask(mask, 512.0, cl, dense_bytes=4096.0)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_price_edge_mask_parallel_drains_beat_one_queue():
+    """Spreading the same uploads over more destination NICs can only
+    shorten the round: per-node queues drain in parallel."""
+    E, K = 8, 9
+    cl = make_cluster(f"hetero:{E}@10ms/1Gbps")
+    rng = np.random.default_rng(1)
+    mask = rng.random((K, E)) < 0.8
+    one_queue = price_edge_mask(mask, 1e6, cl, np.zeros(E, np.int64))
+    spread = price_edge_mask(mask, 1e6, cl, np.arange(E) % 4)
+    assert (spread <= one_queue + 1e-12).all()
+    assert spread.sum() < one_queue.sum()
+
+
+def test_price_edge_mask_validates_shapes():
+    cl = make_cluster("uniform:4@10ms/1Gbps")
+    with pytest.raises(ValueError, match="rounds, edges"):
+        price_edge_mask(np.ones(4, bool), 8.0, cl, np.zeros(4, np.int64))
+    with pytest.raises(ValueError, match="link rows"):
+        price_edge_mask(np.ones((2, 5), bool), 8.0, cl,
+                        np.zeros(5, np.int64))
+    with pytest.raises(ValueError, match="edge_dst must be"):
+        price_edge_mask(np.ones((2, 4), bool), 8.0, cl,
+                        np.zeros(3, np.int64))
+
+
+def test_experiment_prices_graph_runs_per_edge(prob9):
+    r = Experiment(problem=prob9, algo="lag-wk", steps=20,
+                   topology=f"graph:{W}@ring",
+                   cluster="hetero:18@10ms/1Gbps").run()
+    assert r.round_seconds is not None and len(r.round_seconds) == 20
+    assert r.wall_seconds > 0
+    assert r.extras["cluster"] == "hetero"
+
+
+# ---------------------------------------------------------------------------
+# Policy contract: the plane refuses policies without a grad_hat mirror
+# ---------------------------------------------------------------------------
+
+def test_graph_requires_grad_hat_mirror(prob9):
+    from repro import comm
+    from repro.core import lag
+    from repro.engine import make_server, make_topology
+    from repro.graph import run_convex
+
+    class NoMirror(comm.GDPolicy):
+        state_keys = ()
+
+    cfg = lag.LAGConfig(num_workers=W, alpha=0.01, D=10, xi=0.1)
+    with pytest.raises(ValueError, match="grad_hat"):
+        run_convex(convex.synthetic("linreg", num_workers=W, n_per=4, d=3),
+                   NoMirror(), make_server("sgd"), cfg,
+                   make_topology(f"graph:{W}@ring"), K=2)
